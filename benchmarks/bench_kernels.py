@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path on CPU +
+correctness deltas vs the Pallas kernels in interpret mode.  (Interpret-
+mode wall time is NOT a TPU estimate — the roofline tables carry the perf
+analysis; this records call latency and agreement.)"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def bench_kernels() -> List[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # grad_sketch
+    from repro.kernels.grad_sketch.ops import grad_sketch_op
+    from repro.kernels.grad_sketch.ref import grad_sketch_ref
+    N, d, V, k = 512, 64, 2048, 32
+    h = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, V)) * 0.1, jnp.float32)
+    rh = jnp.asarray(rng.normal(size=(d, k)), jnp.float32)
+    rv = jnp.asarray(rng.normal(size=(V, k)), jnp.float32)
+    tg = jnp.asarray(rng.integers(0, V, N), jnp.int32)
+    sc = jnp.ones((N,), jnp.float32)
+    f_ref = jax.jit(lambda *a: grad_sketch_ref(*a))
+    t = _time(f_ref, h, w, rh, rv, tg, sc)
+    err = float(jnp.abs(
+        grad_sketch_op(h, w, rh, rv, tg, sc, use_pallas=True, interpret=True)
+        - f_ref(h, w, rh, rv, tg, sc)).max())
+    rows.append({"name": "kernel/grad_sketch", "us_per_call": t * 1e6,
+                 "derived": f"pallas_vs_ref_maxerr={err:.2e}"})
+
+    # omp_gram
+    from repro.kernels.omp_gram.kernel import omp_gram
+    from repro.kernels.omp_gram.ref import omp_gram_ref
+    g = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)
+    f_ref = jax.jit(omp_gram_ref)
+    t = _time(f_ref, g)
+    err = float(jnp.abs(omp_gram(g, interpret=True) - f_ref(g)).max())
+    rows.append({"name": "kernel/omp_gram", "us_per_call": t * 1e6,
+                 "derived": f"pallas_vs_ref_maxerr={err:.2e}"})
+
+    # swa_attn
+    from repro.kernels.swa_attn.kernel import swa_attn
+    from repro.kernels.swa_attn.ref import swa_attn_ref
+    q, kk, v = (jnp.asarray(rng.normal(size=(1, 4, 512, 64)), jnp.float32)
+                for _ in range(3))
+    f_ref = jax.jit(lambda q, k, v: swa_attn_ref(q, k, v, window=128))
+    t = _time(f_ref, q, kk, v)
+    err = float(jnp.abs(swa_attn(q, kk, v, window=128, tq=128,
+                                 interpret=True)
+                        - f_ref(q, kk, v)).max())
+    rows.append({"name": "kernel/swa_attn", "us_per_call": t * 1e6,
+                 "derived": f"pallas_vs_ref_maxerr={err:.2e}"})
+
+    # rwkv6 chunked
+    from repro.kernels.rwkv6_scan.kernel import rwkv6_wkv
+    from repro.kernels.rwkv6_scan.ref import rwkv6_wkv_ref
+    B, S, H, Nh = 1, 256, 4, 32
+    r, kk2, v2 = (jnp.asarray(rng.normal(size=(B, S, H, Nh)), jnp.float32)
+                  for _ in range(3))
+    w2 = jnp.asarray(rng.uniform(0.5, 0.99, (B, S, H, Nh)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, Nh)) * 0.1, jnp.float32)
+    f_ref = jax.jit(lambda *a: rwkv6_wkv_ref(*a)[0])
+    t = _time(f_ref, r, kk2, v2, w2, u)
+    err = float(jnp.abs(rwkv6_wkv(r, kk2, v2, w2, u, chunk=64,
+                                  interpret=True)[0]
+                        - f_ref(r, kk2, v2, w2, u)).max())
+    rows.append({"name": "kernel/rwkv6_wkv", "us_per_call": t * 1e6,
+                 "derived": f"pallas_vs_ref_maxerr={err:.2e}"})
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV — one row per measured cell, one
+section per paper table/figure (benchmarks/tables.py), plus kernel
+micro-benchmarks and (when dry-run artifacts exist) the roofline table.
+REPRO_BENCH_SCALE=micro|small scales corpus/epoch counts.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    t_start = time.time()
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks.tables import ALL_TABLES
+    from benchmarks.bench_kernels import bench_kernels
+
+    print("name,us_per_call,derived")
+    for fn in ALL_TABLES:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the harness green; report the failure
+            print(f"{fn.__name__},0,ERROR={type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        print(f"# {fn.__name__} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    for r in bench_kernels():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+    # roofline table from dry-run artifacts, if the sweep has run
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+    if os.path.isdir(art) and any(f.endswith(".json")
+                                  for f in os.listdir(art)):
+        from repro.launch.roofline import load_artifacts
+        for rec in load_artifacts(art):
+            t = rec["terms"]
+            print(f"roofline/{rec['arch']}@{rec['shape']}@{rec['mesh']},"
+                  f"{t['bound_s']*1e6:.1f},"
+                  f"dom={t['dominant']};roofline={100*t['roofline_fraction']:.1f}%;"
+                  f"useful={t['useful_ratio'] and round(t['useful_ratio'],2)}")
+    print(f"# total {time.time()-t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

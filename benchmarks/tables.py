@@ -1,0 +1,298 @@
+"""Benchmark harness: one function per paper table/figure (DESIGN.md §7).
+
+Librispeech is not available offline; each benchmark reproduces the paper's
+*experimental design* on seeded synthetic corpora (see data/synthetic.py):
+LM corpora for the decoder-LM port and ASR corpora + the CRDNN RNN-T for
+the paper-faithful setting.  "WER" columns are validation losses (the
+monotone proxy available without an external decoder); "speedup" follows
+the paper's accounting (full-epoch-equivalent cost units incl. selection
+overhead).
+
+Scale: REPRO_BENCH_SCALE=micro (default, minutes on 1 CPU core) | small.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import PGMConfig, TrainConfig
+from repro.core.baselines import gradmatch_pb
+from repro.core.lastlayer import make_proj_for, units_gradients
+from repro.core.metrics import (
+    noise_overlap_index,
+    overlap_index,
+    relative_test_error,
+    speedup,
+)
+from repro.data.pipeline import asr_units, lm_units
+from repro.data.synthetic import make_asr_corpus, make_lm_corpus
+from repro.models.api import build_model
+from repro.train.loop import train_with_selection
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "micro")
+N_LM = {"micro": 80, "small": 192}[SCALE]
+N_ASR = {"micro": 48, "small": 128}[SCALE]
+EPOCHS = {"micro": 4, "small": 8}[SCALE]
+Row = Dict[str, object]
+
+
+def _lm_setup(noise=0.0, seed=0):
+    cfg = get_config("starcoder2-3b-smoke")
+    m = build_model(cfg)
+    corpus = make_lm_corpus(seed, N_LM, 16, cfg.vocab_size,
+                            hard_fraction=0.4, noise_fraction=noise)
+    units = lm_units(corpus, 4)
+    val = lm_units(make_lm_corpus(seed + 99, 16, 16, cfg.vocab_size), 4)
+    return m, units, val, corpus
+
+
+def _asr_setup(noise=0.0, seed=0):
+    cfg = get_config("rnnt-crdnn-smoke")
+    m = build_model(cfg)
+    corpus = make_asr_corpus(seed, N_ASR, n_feats=cfg.rnnt.n_feats,
+                             vocab_size=cfg.rnnt.vocab_size,
+                             noise_fraction=noise)
+    units = asr_units(corpus, 4)
+    val_c = make_asr_corpus(seed + 77, 12, n_feats=cfg.rnnt.n_feats,
+                            vocab_size=cfg.rnnt.vocab_size)
+    return m, units, asr_units(val_c, 4), corpus
+
+
+def _tc(frac, warm=1, select_every=2, val_matching=False, lr=0.5,
+        epochs=None, partitions=2):
+    return TrainConfig(
+        lr=lr, optimizer="sgd", epochs=epochs or EPOCHS,
+        pgm=PGMConfig(subset_fraction=frac, n_partitions=partitions,
+                      select_every=select_every, warm_start_epochs=warm,
+                      sketch_dim_h=24, sketch_dim_v=24,
+                      val_matching=val_matching))
+
+
+def _train(m, units, val, tc, method):
+    t0 = time.time()
+    h = train_with_selection(m, units, tc, method=method, val_units=val)
+    return h, time.time() - t0
+
+
+# ---------------------------------------------------------------------------
+# Fig 2 + Fig 3: WER / relative test error vs speedup per method x fraction
+# ---------------------------------------------------------------------------
+
+def bench_fig2_fig3() -> List[Row]:
+    m, units, val, _ = _lm_setup()
+    rows = []
+    h_full, t_full = _train(m, units, val, _tc(1.0), "full")
+    base = h_full.val_loss[-1]
+    rows.append({"name": "fig2/full", "us_per_call": t_full * 1e6,
+                 "derived": f"val={base:.4f};speedup=1.00"})
+    for frac in (0.1, 0.3):
+        for method in ("pgm", "random", "large_only", "large_small"):
+            h, t = _train(m, units, val, _tc(frac), method)
+            rows.append({
+                "name": f"fig2/{method}@{frac}",
+                "us_per_call": t * 1e6,
+                "derived": (f"val={h.val_loss[-1]:.4f};"
+                            f"rel_err={relative_test_error(h.val_loss[-1], base):+.1f}%;"
+                            f"speedup={speedup(h_full.cost_units, h.cost_units):.2f}"),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 1: gradient memory footprint (the paper's core motivation)
+# ---------------------------------------------------------------------------
+
+def bench_table1_memory() -> List[Row]:
+    rows = []
+    # measured on the smoke RNN-T (paper's arch): exact joint-net gradient
+    m, units, _, _ = _asr_setup()
+    params = m.init_params(jax.random.PRNGKey(0))
+    unit0 = {k: jnp.asarray(v[0]) for k, v in units.items()}
+    from repro.core.lastlayer import rnnt_unit_exact, rnnt_unit_sketch
+    t0 = time.time()
+    g = rnnt_unit_exact(m, params, unit0)
+    t_exact = time.time() - t0
+    proj = make_proj_for(m, jax.random.PRNGKey(1), 64, 64)
+    t0 = time.time()
+    s = rnnt_unit_sketch(m, params, unit0, proj)
+    t_sketch = time.time() - t0
+    n_units = units["tokens"].shape[0]
+    rows.append({"name": "table1/smoke-rnnt-exact",
+                 "us_per_call": t_exact * 1e6,
+                 "derived": f"bytes/unit={g.nbytes};total={g.nbytes*n_units}"})
+    rows.append({"name": "table1/smoke-rnnt-sketch",
+                 "us_per_call": t_sketch * 1e6,
+                 "derived": (f"bytes/unit={s.nbytes};total={s.nbytes*n_units};"
+                             f"compression={g.nbytes/s.nbytes:.0f}x")})
+    # analytic at production scale (paper Table 1 analogue)
+    for arch, n in [("rnnt-crdnn", 5135), ("gemma3-27b", 100000)]:
+        cfg = get_config(arch)
+        if cfg.rnnt:
+            gbytes = cfg.rnnt.joint_dim * cfg.rnnt.vocab_size * 4
+        else:
+            gbytes = cfg.d_model * cfg.vocab_size * 4
+        sk = 64 * 64 * 4
+        rows.append({
+            "name": f"table1/{arch}-analytic", "us_per_call": 0.0,
+            "derived": (f"exact_total={gbytes*n/1e9:.1f}GB;"
+                        f"sketch_total={sk*n/1e9:.3f}GB;"
+                        f"compression={gbytes/sk:.0f}x"),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 2: the paper-faithful RNN-T setting (960H analogue)
+# ---------------------------------------------------------------------------
+
+def bench_table2_scale() -> List[Row]:
+    m, units, val, _ = _asr_setup()
+    rows = []
+    h_full, t_full = _train(m, units, val, _tc(1.0, lr=0.05), "full")
+    base = h_full.val_loss[-1]
+    rows.append({"name": "table2/full", "us_per_call": t_full * 1e6,
+                 "derived": f"val={base:.4f}"})
+    for frac in (0.1, 0.2, 0.3):
+        for method in ("random", "pgm"):
+            h, t = _train(m, units, val, _tc(frac, lr=0.05), method)
+            rows.append({
+                "name": f"table2/{method}@{frac}",
+                "us_per_call": t * 1e6,
+                "derived": (f"val={h.val_loss[-1]:.4f};"
+                            f"rel_err={relative_test_error(h.val_loss[-1], base):+.1f}%;"
+                            f"speedup={speedup(h_full.cost_units, h.cost_units):.2f}"),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 3: noisy training data, validation-gradient matching
+# ---------------------------------------------------------------------------
+
+def bench_table3_noise() -> List[Row]:
+    rows = []
+    for noise in (0.1, 0.3):
+        m, units, val, corpus = _lm_setup(noise=noise, seed=5)
+        for method, vm in (("random", False), ("pgm", True)):
+            tc = _tc(0.3, val_matching=vm)
+            h, t = _train(m, units, val, tc, method)
+            sel = h.selections[-1]["indices"] if h.selections else []
+            unit_noise = corpus.noisy[: (len(corpus.noisy) // 4) * 4]
+            unit_noise = unit_noise.reshape(-1, 4).any(axis=1)
+            noi = noise_overlap_index(sel, unit_noise)
+            rows.append({
+                "name": f"table3/{method}@noise{int(noise*100)}",
+                "us_per_call": t * 1e6,
+                "derived": f"val={h.val_loss[-1]:.4f};NOI={noi:.2f}",
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 4: Overlap Index / Noise Overlap Index across selection rounds
+# ---------------------------------------------------------------------------
+
+def bench_table4_overlap() -> List[Row]:
+    m, units, val, corpus = _lm_setup(noise=0.2, seed=9)
+    rows = []
+    for method in ("pgm", "random"):
+        tc = _tc(0.3, select_every=1, epochs=max(EPOCHS, 5))
+        h, t = _train(m, units, val, tc, method)
+        ois = [s["overlap_index"] for s in h.selections[1:]]
+        unit_noise = corpus.noisy[: (len(corpus.noisy) // 4) * 4]
+        unit_noise = unit_noise.reshape(-1, 4).any(axis=1)
+        nois = [noise_overlap_index(s["indices"], unit_noise)
+                for s in h.selections]
+        rows.append({
+            "name": f"table4/{method}", "us_per_call": t * 1e6,
+            "derived": (f"OI={np.nanmean(ois):.3f};"
+                        f"NOI={np.mean(nois):.3f}"),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 5: warm-start ablation
+# ---------------------------------------------------------------------------
+
+def bench_table5_warmstart() -> List[Row]:
+    m, units, val, _ = _lm_setup(seed=11)
+    rows = []
+    for warm in (1, 2, 3):
+        h, t = _train(m, units, val, _tc(0.2, warm=warm,
+                                         epochs=max(EPOCHS, 5)), "pgm")
+        rows.append({
+            "name": f"table5/ws{warm}", "us_per_call": t * 1e6,
+            "derived": f"val={h.val_loss[-1]:.4f};cost={h.cost_units:.2f}",
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 6: learning rate x data-parallel width
+# ---------------------------------------------------------------------------
+
+def bench_table6_lr() -> List[Row]:
+    m, units, val, _ = _lm_setup(seed=13)
+    rows = []
+    for n_shards, lr in ((1, 0.5), (2, 0.5), (2, 1.0)):
+        tc = _tc(0.3, lr=lr)
+        t0 = time.time()
+        h = train_with_selection(m, units, tc, method="pgm", val_units=val,
+                                 batch_units=n_shards)
+        rows.append({
+            "name": f"table6/shards{n_shards}-lr{lr}",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": f"val={h.val_loss[-1]:.4f}",
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 7: PGM vs GRAD-MATCHPB (objective gap + quality)
+# ---------------------------------------------------------------------------
+
+def bench_table7_pgm_vs_gmpb() -> List[Row]:
+    m, units, val, _ = _lm_setup(seed=17)
+    rows = []
+    for method in ("random", "large_small", "large_only", "gradmatch_pb",
+                   "pgm"):
+        h, t = _train(m, units, val, _tc(0.3, partitions=4), method)
+        rows.append({
+            "name": f"table7/{method}", "us_per_call": t * 1e6,
+            "derived": f"val={h.val_loss[-1]:.4f};cost={h.cost_units:.2f}",
+        })
+    # objective-gap check (Appendix A): mean partition error >= full error
+    units_dev = {k: jnp.asarray(v) for k, v in units.items()}
+    params = m.init_params(jax.random.PRNGKey(0))
+    proj = make_proj_for(m, jax.random.PRNGKey(1), 24, 24)
+    t0 = time.time()
+    g = units_gradients(m, params, units_dev, proj)
+    t_g = time.time() - t0
+    from repro.core.pgm import partitioned_gm
+    selp = partitioned_gm(g, 4, max(int(0.3 * g.shape[0] / 4), 1))
+    selg = gradmatch_pb(g, max(int(0.3 * g.shape[0]), 1))
+    rows.append({
+        "name": "table7/objective-gap", "us_per_call": t_g * 1e6,
+        "derived": (f"pgm_mean_part_err={float(selp.errors.mean()):.3e};"
+                    f"gmpb_err={float(selg.errors.mean()):.3e}"),
+    })
+    return rows
+
+
+ALL_TABLES = [
+    bench_fig2_fig3,
+    bench_table1_memory,
+    bench_table2_scale,
+    bench_table3_noise,
+    bench_table4_overlap,
+    bench_table5_warmstart,
+    bench_table6_lr,
+    bench_table7_pgm_vs_gmpb,
+]

@@ -1,0 +1,51 @@
+"""Quickstart: PGM data-subset selection on a tiny LM, <1 min on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Walks the full paper loop once: build a corpus with easy/hard structure,
+compute per-unit last-layer gradient *sketches*, run partitioned gradient
+matching (Algorithm 1/2), and train on the weighted subset — comparing
+against Random-Subset and full-data training.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import PGMConfig, TrainConfig
+from repro.data.pipeline import lm_units
+from repro.data.synthetic import make_lm_corpus
+from repro.models.api import build_model
+from repro.train.loop import train_with_selection
+
+
+def main():
+    cfg = get_config("starcoder2-3b-smoke")       # reduced same-family config
+    bundle = build_model(cfg)
+    corpus = make_lm_corpus(seed=0, n_examples=64, seq_len=16,
+                            vocab_size=cfg.vocab_size, hard_fraction=0.4)
+    units = lm_units(corpus, unit_size=4)
+    val = lm_units(make_lm_corpus(9, 16, 16, cfg.vocab_size), unit_size=4)
+
+    tc = TrainConfig(
+        lr=0.5, optimizer="sgd", epochs=5,
+        pgm=PGMConfig(subset_fraction=0.3, n_partitions=4, select_every=2,
+                      warm_start_epochs=1, sketch_dim_h=32, sketch_dim_v=32))
+
+    results = {}
+    for method in ("pgm", "random", "full"):
+        h = train_with_selection(bundle, units, tc, method=method,
+                                 val_units=val,
+                                 log_fn=lambda s: print(f"  [{method}] {s}"))
+        results[method] = h
+        print(f"{method:7s}: final val loss {h.val_loss[-1]:.4f}, "
+              f"cost {h.cost_units:.2f} full-epoch units")
+
+    sp = results["full"].cost_units / results["pgm"].cost_units
+    print(f"\nPGM speedup vs full training: {sp:.2f}x "
+          f"(paper reports 2.6-6.3x at production scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Batched serving demo: prefill + token-by-token decode with KV caches
+(ring caches for sliding-window layers, recurrent states for SSM/hybrid).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch gemma3-27b-smoke
+      [--batch 4] [--prompt-len 16] [--new 24] [--temperature 0.7]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serve.engine import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    bundle = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = bundle.init_params(key)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    extra = {}
+    if cfg.family == "vlm":
+        extra["patches"] = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.n_prefix, cfg.d_model))
+    toks, stats = generate(bundle, params, prompts, args.new,
+                           temperature=args.temperature, key=key,
+                           extra_inputs=extra)
+    print(f"arch={cfg.name}: generated {toks.shape} tokens")
+    print(f"prefill {stats.prefill_s*1e3:.1f} ms, decode "
+          f"{stats.decode_s*1e3:.1f} ms, {stats.tokens_per_s:.1f} tok/s "
+          f"(CPU smoke — production rates come from the TPU roofline)")
+    print("sample:", toks[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Train a decoder LM with PGM subset selection — the technique transferred
+to the assigned LM-architecture pool (any ``--arch`` works; smoke variants
+run on CPU, full configs are for real accelerators).
+
+  PYTHONPATH=src python examples/train_lm_pgm.py --arch starcoder2-3b-smoke
+      [--method pgm] [--subset 0.3] [--epochs 6] [--n 96] [--noise 0.0]
+      [--ckpt DIR] [--resume]
+
+Use ``--arch minitron-8b`` (etc.) unchanged on a TPU slice; the launcher
+(`repro.launch.train`) applies the production mesh + sharding policies.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.configs import get_config
+from repro.configs.base import PGMConfig, TrainConfig
+from repro.data.pipeline import lm_units
+from repro.data.synthetic import make_lm_corpus
+from repro.models.api import build_model
+from repro.train.loop import train_with_selection
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b-smoke")
+    ap.add_argument("--method", default="pgm",
+                    choices=["pgm", "random", "large_only", "large_small",
+                             "gradmatch_pb", "full"])
+    ap.add_argument("--subset", type=float, default=0.3)
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--n", type=int, default=96)
+    ap.add_argument("--seq", type=int, default=24)
+    ap.add_argument("--noise", type=float, default=0.0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    bundle = build_model(cfg)
+    corpus = make_lm_corpus(0, args.n, args.seq, cfg.vocab_size,
+                            hard_fraction=0.4, noise_fraction=args.noise)
+    units = lm_units(corpus, unit_size=4)
+    val = lm_units(make_lm_corpus(99, max(args.n // 4, 8), args.seq,
+                                  cfg.vocab_size), unit_size=4)
+    tc = TrainConfig(
+        lr=0.5, optimizer="sgd", epochs=args.epochs,
+        pgm=PGMConfig(subset_fraction=args.subset, n_partitions=4,
+                      select_every=2, warm_start_epochs=1,
+                      sketch_dim_h=32, sketch_dim_v=32,
+                      val_matching=args.noise > 0))
+    h = train_with_selection(bundle, units, tc, method=args.method,
+                             val_units=val, ckpt_dir=args.ckpt,
+                             resume=args.resume, log_fn=print)
+    if h.val_loss:
+        print(f"\nfinal: val loss {h.val_loss[-1]:.4f}, cost "
+              f"{h.cost_units:.2f} full-epoch units, "
+              f"{len(h.selections)} selection rounds")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Subset-selection baselines from the paper (§5 Baselines):
+Random-Subset, LargeOnly, LargeSmall, and GRAD-MATCHPB (Killamsetty et al.
+2021a) — the unpartitioned gradient-matching method PGM upper-bounds.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gm
+from repro.core.pgm import Selection, partitioned_gm
+
+
+def random_subset(key, n_units: int, budget: int) -> Selection:
+    idx = jax.random.permutation(key, n_units)[:budget].astype(jnp.int32)
+    return Selection(indices=idx, weights=jnp.ones((budget,)),
+                     n_selected=jnp.asarray(budget, jnp.int32),
+                     errors=jnp.zeros((1,)))
+
+
+def large_only(durations: jax.Array, budget: int) -> Selection:
+    """Longest utterances first (paper's LargeOnly)."""
+    idx = jnp.argsort(-durations)[:budget].astype(jnp.int32)
+    return Selection(idx, jnp.ones((budget,)),
+                     jnp.asarray(budget, jnp.int32), jnp.zeros((1,)))
+
+
+def large_small(durations: jax.Array, budget: int) -> Selection:
+    """Half smallest + half largest (paper's LargeSmall)."""
+    order = jnp.argsort(durations)
+    k_small = budget // 2
+    k_large = budget - k_small
+    idx = jnp.concatenate([order[:k_small], order[-k_large:]]).astype(jnp.int32)
+    return Selection(idx, jnp.ones((budget,)),
+                     jnp.asarray(budget, jnp.int32), jnp.zeros((1,)))
+
+
+def gradmatch_pb(g_units: jax.Array, budget: int, lam: float = 0.5,
+                 eps: float = 1e-10, nonneg: bool = True,
+                 g_val: Optional[jax.Array] = None) -> Selection:
+    """GRAD-MATCHPB: single-partition gradient matching over the whole
+    candidate set (the sequential baseline; memory-infeasible at paper
+    scale, used for the Table-7 comparison)."""
+    return partitioned_gm(
+        g_units, 1, budget, lam, eps, nonneg,
+        val_matching=g_val is not None, g_val=g_val)

@@ -1,0 +1,111 @@
+"""Gradient Matching (paper Algorithm 2): Orthogonal Matching Pursuit with
+l2-regularized weight refits, solved entirely in Gram space.
+
+Given unit-gradient vectors G (n, D) and a target gradient g_t, the OMP
+loop only ever needs  K = G G^T  and  c = G g_t  (plus ||g_t||^2 for the
+error term).  The O(n D) inner products are paid once in two MXU-friendly
+matmuls (the ``omp_gram`` Pallas kernel); each OMP iteration is then O(k^2)
+gathers + an O(k^3) ridge solve — tiny and fully jittable
+(``lax.while_loop`` with a static budget bound).
+
+E_lambda(w, X) = lambda ||w||^2 + || sum_i w_i g_i - g_t ||^2
+              = lambda ||w||^2 + w^T K_XX w - 2 w^T c_X + ||g_t||^2.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OMPResult(NamedTuple):
+    indices: jax.Array     # (budget,) int32, padded with -1
+    weights: jax.Array     # (budget,) fp32, 0 for unused slots
+    n_selected: jax.Array  # scalar int32
+    error: jax.Array       # final E_lambda value
+
+
+def gram(g: jax.Array) -> jax.Array:
+    """(n, D) -> (n, n) fp32 Gram matrix (oracle for the omp_gram kernel)."""
+    g = g.astype(jnp.float32)
+    return g @ g.T
+
+
+def _masked_ridge_solve(K_sub, c_sub, active, lam):
+    """Solve (K_sub + lam I) w = c_sub over the first ``n_active`` rows;
+    inactive rows are replaced by identity => w_i = 0 there."""
+    k = K_sub.shape[0]
+    act = active.astype(jnp.float32)
+    outer = act[:, None] * act[None, :]
+    M = K_sub * outer + jnp.eye(k) * (lam * act + (1.0 - act))
+    rhs = c_sub * act
+    w = jnp.linalg.solve(M, rhs)
+    return w * act
+
+
+@partial(jax.jit, static_argnames=("budget", "nonneg"))
+def gram_omp(
+    K: jax.Array,          # (n, n) fp32
+    c: jax.Array,          # (n,)  <g_i, g_target>
+    target_sq: jax.Array,  # scalar ||g_target||^2
+    budget: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nonneg: bool = True,
+) -> OMPResult:
+    n = K.shape[0]
+    budget = min(budget, n)
+
+    def error_of(w_full):
+        quad = w_full @ (K @ w_full)
+        return lam * jnp.sum(w_full ** 2) + quad - 2.0 * w_full @ c + target_sq
+
+    def cond(state):
+        i, sel, w_full, err = state
+        return jnp.logical_and(i < budget, err > eps)
+
+    def body(state):
+        i, sel, w_full, _ = state
+        # alignment of each unit with the residual r = g_t - sum w g
+        scores = c - K @ w_full
+        # OR-combine scatter: -1 padding maps to slot 0 with value 0, which
+        # must never clear a previously taken slot
+        taken = jnp.zeros((n,), jnp.int32).at[
+            jnp.where(sel >= 0, sel, 0)].add((sel >= 0).astype(jnp.int32)) > 0
+        scores = jnp.where(taken, -jnp.inf, scores)
+        j = jnp.argmax(scores).astype(jnp.int32)
+        sel = sel.at[i].set(j)
+        # ridge refit on the selected set (gathered (budget, budget) block)
+        safe = jnp.where(sel >= 0, sel, 0)
+        K_sub = K[safe][:, safe]
+        c_sub = c[safe]
+        active = jnp.arange(budget) <= i
+        w_sub = _masked_ridge_solve(K_sub, c_sub, active, lam)
+        if nonneg:
+            w_sub = jnp.maximum(w_sub, 0.0)
+        w_full = jnp.zeros((n,)).at[safe].set(w_sub * active)
+        return i + 1, sel, w_full, error_of(w_full)
+
+    sel0 = jnp.full((budget,), -1, jnp.int32)
+    w0 = jnp.zeros((n,))
+    state = (jnp.asarray(0, jnp.int32), sel0, w0, target_sq + 0.0)
+    i, sel, w_full, err = jax.lax.while_loop(cond, body, state)
+    safe = jnp.where(sel >= 0, sel, 0)
+    w_sel = w_full[safe] * (sel >= 0)
+    return OMPResult(sel, w_sel, i, err)
+
+
+def gm_select(
+    g_units: jax.Array,    # (n, D) unit gradients (sketched or exact)
+    g_target: jax.Array,   # (D,)
+    budget: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nonneg: bool = True,
+) -> OMPResult:
+    """Algorithm 2 entry point on raw gradient vectors."""
+    g = g_units.astype(jnp.float32)
+    t = g_target.astype(jnp.float32)
+    return gram_omp(gram(g), g @ t, t @ t, budget, lam, eps, nonneg)

@@ -1,0 +1,219 @@
+"""Per-unit (mini-batch) last-layer gradients for PGM.
+
+Paper §3: full per-instance RNN-T gradients are prohibitively large (4 MB
+each / 111 GB per corpus), so GRAD-MATCH-style methods use only the last
+layer — for RNN-T the *joint network*, for decoder LMs the ``lm_head``.
+
+This module computes, per selection unit:
+  * the exact flattened last-layer gradient (paper-faithful path), or
+  * its tensor-JL sketch (beyond-paper; see core/sketch.py), streamed over
+    vocab chunks so neither the (N_tok, V) error matrix nor the (d, V)
+    gradient is ever materialized.  The Pallas ``grad_sketch`` kernel is
+    the TPU-fused version of ``streamed_er2``; this file is its oracle.
+
+The per-token error scaling matches the training loss exactly:
+per-example mean over tokens, then mean over examples, i.e.
+``E[b,s] = (softmax - onehot) * mask[b,s] / (n_tok_b * B)``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import Projections, exact_from_factors, sketch_from_factors
+
+
+# ---------------------------------------------------------------------------
+# LM factor extraction
+# ---------------------------------------------------------------------------
+
+def lm_unit_factors(bundle, params, batch):
+    """-> (h (N,d) fp32, targets (N,), scale (N,) fp32).  N = B*(S-1)."""
+    h, targets, mask, _ = bundle.final_hidden(params, batch, remat=False)
+    B = h.shape[0]
+    denom = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1.0)
+    scale = (mask / (denom * B)).astype(jnp.float32)
+    d = h.shape[-1]
+    return (h.reshape(-1, d).astype(jnp.float32),
+            targets.reshape(-1).astype(jnp.int32),
+            scale.reshape(-1))
+
+
+def streamed_er2(h, w_head, targets, scale, r_v, chunk: int = 8192):
+    """Computes ``E @ R2`` without materializing E, streaming vocab chunks.
+
+    h: (N,d) fp32; w_head: (d,V); targets (N,); scale (N,);
+    r_v: (V,k2).  Returns (N,k2) fp32.
+    E[n] = scale[n] * (softmax(h[n] @ W) - onehot(targets[n])).
+    """
+    N, d = h.shape
+    V = w_head.shape[1]
+    k2 = r_v.shape[1]
+    nc = -(-V // chunk)
+    pad = nc * chunk - V
+    w = jnp.pad(w_head.astype(jnp.float32), ((0, 0), (0, pad)),
+                constant_values=0.0)
+    rv = jnp.pad(r_v.astype(jnp.float32), ((0, pad), (0, 0)))
+    w = w.reshape(d, nc, chunk).transpose(1, 0, 2)            # (nc,d,chunk)
+    rv = rv.reshape(nc, chunk, k2)
+    valid = (jnp.arange(nc * chunk).reshape(nc, chunk) < V)
+
+    # single pass: flash-style online softmax accumulation of P @ R2 —
+    # the unnormalized accumulator is rescaled as the running max moves
+    # (§Perf select-iter-2: halves the logits recompute vs two-pass)
+    def step(carry, xs):
+        m, s, acc = carry
+        wc, rc, vc = xs
+        lg = jnp.where(vc, h @ wc, -jnp.inf)                  # (N,chunk)
+        m_new = jnp.maximum(m, lg.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(lg - m_new[:, None])
+        s = s * alpha + p.sum(-1)
+        acc = acc * alpha[:, None] + p @ rc
+        return (m_new, s, acc), None
+
+    m0 = jnp.full((N,), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((N,), jnp.float32)
+    acc0 = jnp.zeros((N, k2), jnp.float32)
+    (m, s, acc), _ = jax.lax.scan(step, (m0, s0, acc0), (w, rv, valid))
+    er2 = acc / jnp.maximum(s, 1e-30)[:, None]
+    er2 = er2 - r_v.astype(jnp.float32)[targets]
+    return er2 * scale[:, None]
+
+
+def lm_unit_sketch(bundle, params, batch, proj: Projections,
+                   vocab_chunk: int = 8192) -> jax.Array:
+    h, targets, scale = lm_unit_factors(bundle, params, batch)
+    w = bundle.head_weight(params)
+    er2 = streamed_er2(h, w, targets, scale, proj.r_v, vocab_chunk)
+    hr = h @ proj.r_h
+    return (hr.T @ er2).reshape(-1)
+
+
+def lm_unit_exact(bundle, params, batch) -> jax.Array:
+    """Paper-faithful: full flattened lm_head gradient (small models only)."""
+    h, targets, scale = lm_unit_factors(bundle, params, batch)
+    w = bundle.head_weight(params)
+    logits = h @ w.astype(jnp.float32)
+    p = jax.nn.softmax(logits, axis=-1)
+    e = p - jax.nn.one_hot(targets, w.shape[1], dtype=jnp.float32)
+    e = e * scale[:, None]
+    return exact_from_factors(h, e)
+
+
+# ---------------------------------------------------------------------------
+# RNN-T (joint network) factor extraction — error via autodiff through the
+# transducer loss (the analytic LM shortcut doesn't apply to the lattice).
+# ---------------------------------------------------------------------------
+
+def rnnt_unit_factors(bundle, params, batch):
+    from repro.models import rnnt as rnnt_mod
+    cfg = bundle.cfg
+    r = cfg.rnnt
+    z, _, _, _ = bundle.final_hidden(params, batch)            # (B,T,U1,J)
+    w_out = bundle.head_weight(params)
+
+    def loss_of_logits(logits):
+        from repro.core.rnnt_loss import rnnt_loss_from_logits
+        t_lens = jnp.maximum(batch["feat_lens"] // r.time_reduction, 1)
+        per_ex = rnnt_loss_from_logits(logits, batch["tokens"], t_lens,
+                                       batch["token_lens"])
+        per_ex = per_ex / jnp.maximum(batch["token_lens"].astype(jnp.float32),
+                                      1.0)
+        return per_ex.mean()
+
+    logits = rnnt_mod.joint_logits(params, z)
+    e = jax.grad(loss_of_logits)(logits.astype(jnp.float32))   # (B,T,U1,V)
+    J = z.shape[-1]
+    return (z.reshape(-1, J).astype(jnp.float32),
+            e.reshape(-1, e.shape[-1]))
+
+
+def rnnt_unit_sketch(bundle, params, batch, proj: Projections) -> jax.Array:
+    h, e = rnnt_unit_factors(bundle, params, batch)
+    return sketch_from_factors(h, e, proj)
+
+
+def rnnt_unit_exact(bundle, params, batch) -> jax.Array:
+    h, e = rnnt_unit_factors(bundle, params, batch)
+    return exact_from_factors(h, e)
+
+
+# ---------------------------------------------------------------------------
+# Unified entry points
+# ---------------------------------------------------------------------------
+
+def unit_gradient(bundle, params, batch, proj: Optional[Projections],
+                  exact: bool = False, vocab_chunk: int = 8192) -> jax.Array:
+    """One selection unit -> gradient representation vector."""
+    if bundle.cfg.family == "rnnt":
+        return (rnnt_unit_exact(bundle, params, batch) if exact
+                else rnnt_unit_sketch(bundle, params, batch, proj))
+    return (lm_unit_exact(bundle, params, batch) if exact
+            else lm_unit_sketch(bundle, params, batch, proj, vocab_chunk))
+
+
+def units_gradients(bundle, params, units, proj: Optional[Projections],
+                    exact: bool = False, vocab_chunk: int = 8192) -> jax.Array:
+    """units: batch pytree with leading (n_units, ...) axis.
+    Returns (n_units, D) fp32.  Sequential lax.map bounds peak memory to a
+    single unit's forward pass (the paper's partition rationale)."""
+    fn = lambda u: unit_gradient(bundle, params, u, proj, exact, vocab_chunk)
+    return jax.lax.map(fn, units)
+
+
+def units_gradients_batched(bundle, params, units, proj: Projections,
+                            chunk_units: Optional[int] = None,
+                            shard=None, vocab_chunk: int = 8192) -> jax.Array:
+    """Batched stage-A sketching for the distributed selection step.
+
+    ``units_gradients`` maps sequentially over units — correct and
+    memory-bounded on one host, but under GSPMD a scan over a *sharded*
+    units axis degenerates to every device computing every unit (16x
+    redundant compute; §Perf select-iter-1).  Here units are flattened to
+    an example axis that stays sharded over the data mesh axes; per-unit
+    sketches are recovered with a segment contraction.  LM families only.
+    """
+    from repro.models.common import IDENTITY_SHARDER
+    shard = shard or IDENTITY_SHARDER
+    lead = jax.tree.leaves(units)[0].shape
+    U, b = lead[0], lead[1]
+    flat = jax.tree.map(lambda a: a.reshape((U * b,) + a.shape[2:]), units)
+    cu = min(chunk_units or max(U // 16, 1), U)
+    while U % cu:
+        cu -= 1
+    n_chunks = U // cu
+    xs = jax.tree.map(
+        lambda a: a.reshape((n_chunks, cu * b) + a.shape[1:]), flat)
+    w = bundle.head_weight(params)
+
+    def chunk_fn(_, cb):
+        h, targets, mask, _ = bundle.final_hidden(params, cb, shard=shard,
+                                                  remat=False)
+        d = h.shape[-1]
+        S = h.shape[1]
+        denom = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1.0)
+        scale = (mask / (denom * b)).astype(jnp.float32)
+        hf = h.reshape(-1, d).astype(jnp.float32)
+        er2 = streamed_er2(hf, w, targets.reshape(-1).astype(jnp.int32),
+                           scale.reshape(-1), proj.r_v, vocab_chunk)
+        hr = hf @ proj.r_h.astype(jnp.float32)
+        k1, k2 = hr.shape[-1], er2.shape[-1]
+        sk = jnp.einsum("unk,unl->ukl",
+                        hr.reshape(cu, b * S, k1),
+                        er2.reshape(cu, b * S, k2))
+        return None, sk.reshape(cu, k1 * k2)
+
+    _, sks = jax.lax.scan(chunk_fn, None, xs)
+    return sks.reshape(U, -1)
+
+
+def make_proj_for(bundle, key, k1: int = 64, k2: int = 64) -> Projections:
+    from repro.core.sketch import make_projections
+    cfg = bundle.cfg
+    if cfg.family == "rnnt":
+        return make_projections(key, cfg.rnnt.joint_dim, cfg.rnnt.vocab_size,
+                                k1, k2)
+    return make_projections(key, cfg.d_model, cfg.vocab_size, k1, k2)

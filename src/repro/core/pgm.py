@@ -1,0 +1,176 @@
+"""PGM — Partitioned Gradient Matching (paper Algorithm 1).
+
+Every ``R`` epochs:
+  stage A  compute per-unit last-layer gradient representations for all
+           candidate units (sketched by default; exact = paper-faithful);
+  stage B  split units into D partitions; per partition, run gradient
+           matching (Algorithm 2 / gm.py) against either the partition's
+           own mean gradient (Val=False) or the validation gradient
+           (Val=True, robust mode), each with budget b_k/D;
+  stage C  concatenate the partial subsets and their weights.
+
+Distribution (DESIGN.md §5): stage A is a plain GSPMD jit (units sharded
+over the ``data`` mesh axis, model params over ``model``); stage B is
+embarrassingly parallel across partitions and is dispatched with
+``shard_map`` over ``data`` in ``pgm_select_sharded`` — the jax-native
+equivalent of the paper's "one GM per GPU".
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gm
+from repro.core.lastlayer import units_gradients
+from repro.core.sketch import Projections
+
+
+class Selection(NamedTuple):
+    indices: jax.Array     # (b_k,) global unit ids, -1 padded
+    weights: jax.Array     # (b_k,) fp32
+    n_selected: jax.Array  # scalar
+    errors: jax.Array      # (D,) per-partition final E_lambda
+
+
+# ---------------------------------------------------------------------------
+# Stage B: partitioned OMP over precomputed gradient representations
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_partitions", "budget_per_part",
+                                   "nonneg", "val_matching"))
+def partitioned_gm(
+    g_units: jax.Array,            # (n, D) unit-gradient vectors
+    n_partitions: int,
+    budget_per_part: int,
+    lam: float = 0.5,
+    eps: float = 1e-10,
+    nonneg: bool = True,
+    val_matching: bool = False,
+    g_val: Optional[jax.Array] = None,   # (D,) required when val_matching
+) -> Selection:
+    n, D_sk = g_units.shape
+    P = n_partitions
+    assert n % P == 0, f"n units {n} must divide into {P} partitions"
+    per = n // P
+    gp = g_units.reshape(P, per, D_sk).astype(jnp.float32)
+
+    if val_matching:
+        target = jnp.broadcast_to(g_val.astype(jnp.float32), (P, D_sk))
+    else:
+        # match the partition's own summed gradient: note sum (not mean) so
+        # that sum_i w_i g_i can reach it with O(1) weights per unit
+        target = gp.sum(axis=1)
+
+    def one_partition(g_p, t_p):
+        K = g_p @ g_p.T
+        c = g_p @ t_p
+        return gm.gram_omp(K, c, t_p @ t_p, budget_per_part, lam, eps, nonneg)
+
+    res = jax.vmap(one_partition)(gp, target)
+    offsets = (jnp.arange(P, dtype=jnp.int32) * per)[:, None]
+    glob = jnp.where(res.indices >= 0, res.indices + offsets, -1)
+    return Selection(
+        indices=glob.reshape(-1),
+        weights=res.weights.reshape(-1),
+        n_selected=res.n_selected.sum(),
+        errors=res.error,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Full Algorithm 1 selection round (stages A + B)
+# ---------------------------------------------------------------------------
+
+def pgm_select(
+    bundle,
+    params,
+    units,                        # batch pytree with leading (n_units,) axis
+    pgm_cfg,
+    proj: Optional[Projections] = None,
+    val_units=None,               # validation units when val_matching
+) -> Selection:
+    n_units = jax.tree.leaves(units)[0].shape[0]
+    budget_total = max(int(pgm_cfg.subset_fraction * n_units), 1)
+    D = min(pgm_cfg.n_partitions, n_units)
+    budget_per = max(budget_total // D, 1)
+    exact = not pgm_cfg.use_sketch
+
+    g = units_gradients(bundle, params, units, proj, exact=exact)
+    g_val = None
+    if pgm_cfg.val_matching:
+        gv = units_gradients(bundle, params, val_units, proj, exact=exact)
+        # validation target: mean gradient scaled to the partition mass so
+        # budgets/weights stay comparable with train matching
+        g_val = gv.mean(axis=0) * (n_units / D)
+    return partitioned_gm(
+        g, D, budget_per, pgm_cfg.lam, pgm_cfg.eps,
+        pgm_cfg.nonneg_weights, pgm_cfg.val_matching, g_val)
+
+
+# ---------------------------------------------------------------------------
+# shard_map distribution of stage B (partitions over the data axis)
+# ---------------------------------------------------------------------------
+
+def pgm_select_sharded(mesh, axis: str, g_units, pgm_cfg, g_val=None):
+    """Stage B under shard_map: each ``axis`` shard owns n_partitions/|axis|
+    whole partitions and runs its OMPs locally with zero cross-device
+    traffic; outputs are concatenated by the final all_gather.
+
+    g_units: (n, D) global array (sharded on axis 0 by the caller).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax import shard_map
+
+    n = g_units.shape[0]
+    size = mesh.shape[axis]
+    D = pgm_cfg.n_partitions
+    assert D % size == 0, (D, size)
+    budget_total = max(int(pgm_cfg.subset_fraction * n), 1)
+    budget_per = max(budget_total // D, 1)
+    local_parts = D // size
+
+    def local_fn(g_local, g_val_local):
+        # g_local: (n/size, D_sk) -> local partitions
+        sel = partitioned_gm(
+            g_local, local_parts, budget_per, pgm_cfg.lam, pgm_cfg.eps,
+            pgm_cfg.nonneg_weights, pgm_cfg.val_matching,
+            g_val_local[0] if pgm_cfg.val_matching else None)
+        # globalize indices by shard offset
+        idx = jax.lax.axis_index(axis) * (n // size)
+        indices = jnp.where(sel.indices >= 0, sel.indices + idx, -1)
+        return (jax.lax.all_gather(indices, axis, tiled=True),
+                jax.lax.all_gather(sel.weights, axis, tiled=True),
+                jax.lax.psum(sel.n_selected, axis),
+                jax.lax.all_gather(sel.errors, axis, tiled=True))
+
+    gv = (jnp.zeros((1, g_units.shape[1]), jnp.float32) if g_val is None
+          else g_val[None])
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=(P(), P(), P(), P()),
+        # the OMP while_loop creates fresh (unvarying) carries inside the
+        # mapped body; disable varying-manual-axes checking
+        check_vma=False,
+    )
+    indices, weights, n_sel, errors = fn(g_units, gv)
+    return Selection(indices, weights, n_sel, errors)
+
+
+# ---------------------------------------------------------------------------
+# Applying a selection: expand selected units into a weighted sub-dataset
+# ---------------------------------------------------------------------------
+
+def gather_selected(units, selection: Selection):
+    """Materialize the selected units (drop -1 padding is the caller's
+    concern; padded entries carry weight 0)."""
+    idx = jnp.where(selection.indices >= 0, selection.indices, 0)
+    sub = jax.tree.map(lambda a: a[idx], units)
+    if "weights" in sub:
+        w = selection.weights * (selection.indices >= 0)
+        # unit weight broadcasts over the unit's examples
+        sub = dict(sub, weights=sub["weights"] * w[:, None])
+    return sub

@@ -1,0 +1,90 @@
+"""RNN-Transducer loss (Graves 2012) in pure JAX.
+
+Forward algorithm over the (T, U+1) lattice in log space.  The row
+recursion  alpha[t,u] = logaddexp(alpha[t-1,u] + blank[t-1,u],
+                                  alpha[t,u-1] + emit[t,u-1])
+is evaluated with an outer ``lax.scan`` over T rows; the within-row
+dependency is a first-order linear recurrence in the log semiring and is
+computed with ``lax.associative_scan``:
+  elements (c, b) combine as (c1+c2, logaddexp(b1+c2, b2)).
+Complexity O(T*U), compile size O(1) in T and U.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _log_semiring_combine(e1, e2):
+    c1, b1 = e1
+    c2, b2 = e2
+    return c1 + c2, jnp.logaddexp(b1 + c2, b2)
+
+
+def _row_update(base, emit_prev):
+    """Solve a[u] = logaddexp(base[u], a[u-1] + emit_prev[u-1]) for all u.
+
+    base, emit_prev: (..., U1).  emit_prev[..., u] is the emission score
+    consumed when moving u-1 -> u (i.e. aligned so position u uses
+    emit_prev[..., u]); emit_prev[..., 0] must be NEG (no predecessor).
+    """
+    c = emit_prev
+    b = base
+    _, a = jax.lax.associative_scan(_log_semiring_combine, (c, b), axis=-1)
+    return a
+
+
+def rnnt_loss(
+    log_probs: jax.Array,     # (B, T, U1, V) log-softmaxed joint outputs
+    labels: jax.Array,        # (B, U) int32
+    t_lens: jax.Array,        # (B,) frames per example
+    u_lens: jax.Array,        # (B,) labels per example
+    blank: int = 0,
+) -> jax.Array:
+    """Per-example negative log-likelihood, shape (B,)."""
+    B, T, U1, V = log_probs.shape
+    U = U1 - 1
+    lp = log_probs.astype(jnp.float32)
+
+    lp_blank = lp[..., blank]                                   # (B,T,U1)
+    lab = jnp.pad(labels, ((0, 0), (0, 1)))                     # (B,U1)
+    lp_emit = jnp.take_along_axis(
+        lp, lab[:, None, :, None].astype(jnp.int32), axis=-1)[..., 0]
+    # invalidate emissions at/after u_lens (cannot emit past the last label)
+    u_ids = jnp.arange(U1)
+    emit_valid = u_ids[None, :] < u_lens[:, None]               # (B,U1)
+    lp_emit = jnp.where(emit_valid[:, None, :], lp_emit, NEG)
+
+    # alpha[0] row: alpha[0,0]=0; alpha[0,u] = sum_{j<u} emit[0,j]
+    init_base = jnp.full((B, U1), NEG).at[:, 0].set(0.0)
+    emit_shift0 = jnp.pad(lp_emit[:, 0, :-1], ((0, 0), (1, 0)),
+                          constant_values=NEG)
+    alpha0 = _row_update(init_base, emit_shift0)
+
+    def row_step(alpha_prev, inputs):
+        lpb_prev, lpe_t = inputs                                # (B,U1) each
+        base = alpha_prev + lpb_prev                            # blank move
+        emit_shift = jnp.pad(lpe_t[:, :-1], ((0, 0), (1, 0)),
+                             constant_values=NEG)
+        alpha_t = _row_update(base, emit_shift)
+        return alpha_t, alpha_t
+
+    xs = (jnp.moveaxis(lp_blank, 1, 0)[:-1],                    # rows 0..T-2
+          jnp.moveaxis(lp_emit, 1, 0)[1:])                      # rows 1..T-1
+    _, alphas_rest = jax.lax.scan(row_step, alpha0, xs)
+    alphas = jnp.concatenate([alpha0[None], alphas_rest], axis=0)  # (T,B,U1)
+
+    # NLL = -(alpha[T-1, U] + blank[T-1, U]) gathered at true lengths
+    t_idx = jnp.clip(t_lens - 1, 0, T - 1)
+    a_final = alphas[t_idx, jnp.arange(B)]                      # (B,U1)
+    a_at_u = jnp.take_along_axis(a_final, u_lens[:, None], axis=1)[:, 0]
+    b_final = jnp.take_along_axis(
+        lp_blank[jnp.arange(B), t_idx], u_lens[:, None], axis=1)[:, 0]
+    return -(a_at_u + b_final)
+
+
+def rnnt_loss_from_logits(logits, labels, t_lens, u_lens, blank: int = 0):
+    return rnnt_loss(jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1),
+                     labels, t_lens, u_lens, blank)

@@ -1,0 +1,50 @@
+"""Tensor-JL sketching of last-layer gradients (beyond-paper optimization,
+DESIGN.md §2).
+
+The last-layer gradient of a unit (mini-batch) factorizes as
+``G = H^T E`` with H the pre-head activations (rows = tokens/lattice
+points) and E = dL/dlogits.  We sketch ``S = R1^T G R2`` with independent
+Gaussian projections R1 (d_h, k1), R2 (d_v, k2) whose entries are
+N(0, 1/k1) / N(0, 1/k2), giving the unbiased inner-product estimate
+``E<S, S'> = <G, G'>`` (tensor-product Johnson-Lindenstrauss).
+
+Crucially S is computed as ``(H R1)^T (E R2)`` — the d_h x d_v gradient is
+never materialized; E itself is streamed over vocab chunks (the Pallas
+``grad_sketch`` kernel fuses this with an online softmax on TPU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Projections(NamedTuple):
+    r_h: jax.Array      # (d_hidden, k1)
+    r_v: jax.Array      # (d_vocab, k2)
+
+    @property
+    def sketch_dim(self) -> int:
+        return self.r_h.shape[1] * self.r_v.shape[1]
+
+
+def make_projections(key, d_hidden: int, d_vocab: int,
+                     k1: int = 64, k2: int = 64) -> Projections:
+    kh, kv = jax.random.split(key)
+    r_h = jax.random.normal(kh, (d_hidden, k1)) / jnp.sqrt(float(k1))
+    r_v = jax.random.normal(kv, (d_vocab, k2)) / jnp.sqrt(float(k2))
+    return Projections(r_h, r_v)
+
+
+def sketch_from_factors(h: jax.Array, e: jax.Array, proj: Projections
+                        ) -> jax.Array:
+    """h: (N, d_h) fp32; e: (N, d_v) fp32 -> flattened sketch (k1*k2,)."""
+    hr = h @ proj.r_h                     # (N, k1)
+    er = e @ proj.r_v                     # (N, k2)
+    return (hr.T @ er).reshape(-1)
+
+
+def exact_from_factors(h: jax.Array, e: jax.Array) -> jax.Array:
+    """Paper-faithful path: the full flattened last-layer gradient."""
+    return (h.T @ e).reshape(-1)

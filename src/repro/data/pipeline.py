@@ -1,0 +1,96 @@
+"""Deterministic, shardable batch pipeline.
+
+Selection *units* are fixed mini-batches (the paper's PerBatch
+granularity): `make_units` stacks a corpus into (n_units, unit_size, ...)
+arrays once; PGM selects unit indices + weights; `subset_iterator` then
+re-shuffles the selected units into SGD batches each epoch (paper §4:
+"randomly shuffle elements in the subset, divide into mini-batches of
+size B, run weighted mini-batch SGD").
+
+Everything is keyed by (seed, epoch) so a restart resumes the exact
+stream (fault tolerance: the checkpoint records epoch + microstep).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import ASRCorpus, LMCorpus
+
+
+def lm_units(corpus: LMCorpus, unit_size: int) -> Dict[str, np.ndarray]:
+    """-> dict with leading (n_units, unit_size, ...) arrays."""
+    n = (corpus.tokens.shape[0] // unit_size) * unit_size
+    toks = corpus.tokens[:n]
+    lens = corpus.lengths[:n]
+    S = toks.shape[1]
+    mask = (np.arange(S)[None, :] < lens[:, None]).astype(np.float32)
+    nu = n // unit_size
+    return {
+        "tokens": toks.reshape(nu, unit_size, S).astype(np.int32),
+        "loss_mask": mask.reshape(nu, unit_size, S),
+        "weights": np.ones((nu, unit_size), np.float32),
+    }
+
+
+def asr_units(corpus: ASRCorpus, unit_size: int) -> Dict[str, np.ndarray]:
+    n = (corpus.feats.shape[0] // unit_size) * unit_size
+    nu = n // unit_size
+    sh = lambda a: a[:n].reshape((nu, unit_size) + a.shape[1:])
+    return {
+        "feats": sh(corpus.feats).astype(np.float32),
+        "feat_lens": sh(corpus.feat_lens).astype(np.int32),
+        "tokens": sh(corpus.tokens).astype(np.int32),
+        "token_lens": sh(corpus.token_lens).astype(np.int32),
+        "weights": np.ones((nu, unit_size), np.float32),
+    }
+
+
+def unit_durations(units: Dict[str, np.ndarray]) -> np.ndarray:
+    """Per-unit total duration (for LargeOnly/LargeSmall baselines)."""
+    if "feat_lens" in units:
+        return units["feat_lens"].sum(axis=1).astype(np.float32)
+    return units["loss_mask"].sum(axis=(1, 2)).astype(np.float32)
+
+
+def full_iterator(units, seed: int, epoch: int,
+                  batch_units: int = 1) -> Iterator[Dict[str, np.ndarray]]:
+    """Iterate all units in a seeded epoch shuffle (warm-start phase)."""
+    nu = units[next(iter(units))].shape[0]
+    order = np.random.default_rng((seed, epoch)).permutation(nu)
+    for i in range(0, nu - nu % batch_units, batch_units):
+        sel = order[i : i + batch_units]
+        yield {k: _merge_units(v[sel]) for k, v in units.items()}
+
+
+def subset_iterator(units, indices, weights, seed: int, epoch: int,
+                    batch_units: int = 1) -> Iterator[Dict[str, np.ndarray]]:
+    """Weighted iteration over a PGM/baseline selection."""
+    valid = np.asarray(indices) >= 0
+    idx = np.asarray(indices)[valid]
+    w = np.asarray(weights)[valid]
+    order = np.random.default_rng((seed, epoch, 1)).permutation(len(idx))
+    idx, w = idx[order], w[order]
+    for i in range(0, len(idx) - len(idx) % batch_units, batch_units):
+        sel = idx[i : i + batch_units]
+        batch = {k: _merge_units(v[sel]) for k, v in units.items()}
+        uw = np.repeat(w[i : i + batch_units],
+                       units["weights"].shape[1]).astype(np.float32)
+        batch["weights"] = batch["weights"] * uw
+        yield batch
+
+
+def _merge_units(a: np.ndarray) -> np.ndarray:
+    """(k, unit, ...) -> (k*unit, ...)."""
+    return a.reshape((-1,) + a.shape[2:])
+
+
+def shard_batch(batch, sharding=None):
+    """Host batch -> device arrays (optionally with a NamedSharding)."""
+    import jax
+    if sharding is None:
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+    return {k: jax.device_put(v, sharding[k] if isinstance(sharding, dict)
+                              else sharding) for k, v in batch.items()}

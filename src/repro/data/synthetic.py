@@ -1,0 +1,130 @@
+"""Seeded synthetic corpora (offline stand-ins for Librispeech/TIMIT).
+
+Design goal: the corpora must carry enough *structure* that data-subset
+selection has signal to exploit —
+  * a latent "difficulty" mixture: easy examples come from a low-entropy
+    Markov chain, hard examples from a higher-entropy one (subset methods
+    that match gradients should prefer a difficulty profile matching the
+    target distribution);
+  * length variation (log-normal-ish) so LargeOnly/LargeSmall behave like
+    in the paper;
+  * noise injection à la Librispeech-noise: a fraction of examples gets
+    feature noise at a given SNR (ASR) or corrupted labels (LM).
+Everything is generated from an integer seed — runs are reproducible and
+shard-deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LMCorpus:
+    tokens: np.ndarray        # (N, S) int32, padded with pad_id
+    lengths: np.ndarray       # (N,)
+    difficulty: np.ndarray    # (N,) float in [0,1]
+    noisy: np.ndarray         # (N,) bool
+    vocab_size: int
+    pad_id: int = 0
+
+
+@dataclasses.dataclass
+class ASRCorpus:
+    feats: np.ndarray         # (N, T, F) float32
+    feat_lens: np.ndarray     # (N,)
+    tokens: np.ndarray        # (N, U) int32 (0 = blank/pad)
+    token_lens: np.ndarray    # (N,)
+    durations: np.ndarray     # (N,) float (seconds-like, for Large* baselines)
+    noisy: np.ndarray         # (N,) bool
+    vocab_size: int
+    n_feats: int
+
+
+def _markov_tokens(rng, n, s_max, vocab, temperature):
+    """Rows of a random Markov chain; temperature controls entropy."""
+    k = min(vocab - 1, 64)
+    logits = rng.normal(size=(k, k)) / max(temperature, 1e-3)
+    probs = np.exp(logits - logits.max(axis=1, keepdims=True))
+    probs /= probs.sum(axis=1, keepdims=True)
+    cdf = np.cumsum(probs, axis=1)
+    out = np.zeros((n, s_max), np.int32)
+    state = rng.integers(0, k, size=n)
+    for t in range(s_max):
+        out[:, t] = state + 1                         # reserve 0 for pad
+        u = rng.random(n)
+        state = (cdf[state] > u[:, None]).argmax(axis=1)
+    return out
+
+
+def make_lm_corpus(
+    seed: int, n_examples: int, seq_len: int, vocab_size: int,
+    hard_fraction: float = 0.4, noise_fraction: float = 0.0,
+    min_len_frac: float = 0.3,
+) -> LMCorpus:
+    rng = np.random.default_rng(seed)
+    n_hard = int(n_examples * hard_fraction)
+    easy = _markov_tokens(rng, n_examples - n_hard, seq_len, vocab_size, 0.3)
+    hard = _markov_tokens(rng, n_hard, seq_len, vocab_size, 2.5)
+    tokens = np.concatenate([easy, hard], axis=0)
+    difficulty = np.concatenate([
+        np.zeros(n_examples - n_hard), np.ones(n_hard)])
+    perm = rng.permutation(n_examples)
+    tokens, difficulty = tokens[perm], difficulty[perm]
+
+    lengths = np.clip(
+        (np.exp(rng.normal(0.0, 0.5, n_examples))
+         * seq_len * (min_len_frac + 0.35)).astype(np.int32),
+        max(int(seq_len * min_len_frac), 4), seq_len)
+    for i in range(n_examples):
+        tokens[i, lengths[i]:] = 0
+
+    noisy = np.zeros(n_examples, bool)
+    if noise_fraction > 0:
+        idx = rng.choice(n_examples, int(n_examples * noise_fraction),
+                         replace=False)
+        noisy[idx] = True
+        for i in idx:                                  # label corruption
+            L = lengths[i]
+            n_corrupt = max(L // 3, 1)
+            pos = rng.choice(L, n_corrupt, replace=False)
+            tokens[i, pos] = rng.integers(1, vocab_size, n_corrupt)
+    return LMCorpus(tokens, lengths, difficulty, noisy, vocab_size)
+
+
+def make_asr_corpus(
+    seed: int, n_examples: int, n_feats: int = 16, vocab_size: int = 32,
+    min_tokens: int = 4, max_tokens: int = 12, frames_per_token: int = 4,
+    noise_fraction: float = 0.0, snr_db: float = 10.0,
+) -> ASRCorpus:
+    """Feats are emissions of the token sequence (tokens are recoverable
+    from feats), so an acoustic model can actually learn the mapping."""
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(vocab_size, n_feats)).astype(np.float32)
+    U = max_tokens
+    T = max_tokens * frames_per_token
+    tokens = np.zeros((n_examples, U), np.int32)
+    feats = np.zeros((n_examples, T, n_feats), np.float32)
+    token_lens = rng.integers(min_tokens, max_tokens + 1, n_examples)
+    noisy = np.zeros(n_examples, bool)
+    if noise_fraction > 0:
+        noisy[rng.choice(n_examples, int(n_examples * noise_fraction),
+                         replace=False)] = True
+    for i in range(n_examples):
+        u = token_lens[i]
+        seq = rng.integers(1, vocab_size, u)
+        tokens[i, :u] = seq
+        frames = np.repeat(emb[seq], frames_per_token, axis=0)
+        frames = frames + rng.normal(size=frames.shape) * 0.1
+        if noisy[i]:
+            # additive noise at the given SNR
+            sig_pow = float((frames ** 2).mean())
+            noise_pow = sig_pow / (10 ** (snr_db / 10))
+            frames = frames + rng.normal(size=frames.shape) * np.sqrt(noise_pow)
+        feats[i, : u * frames_per_token] = frames
+    feat_lens = (token_lens * frames_per_token).astype(np.int32)
+    durations = feat_lens.astype(np.float32) / frames_per_token
+    return ASRCorpus(feats, feat_lens, tokens, token_lens.astype(np.int32),
+                     durations, noisy, vocab_size, n_feats)

@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the fused gradient-sketch.
+
+Backend selection: Pallas kernel on TPU (or interpret=True for CPU
+validation); the vocab-chunked pure-jnp path (core.lastlayer.streamed_er2)
+elsewhere — same memory behaviour, XLA-fused."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lastlayer import streamed_er2
+from repro.kernels.grad_sketch.kernel import grad_sketch as _pallas_sketch
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def grad_sketch_op(h, w, r_h, r_v, targets, scale, *,
+                   use_pallas: bool = None, interpret: bool = None,
+                   vocab_chunk: int = 8192):
+    """h (N,d); w (d,V); r_h (d,k1); r_v (V,k2); targets (N,); scale (N,)
+    -> (k1, k2) fp32 sketch of the last-layer gradient."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        return _pallas_sketch(h, w, r_h, r_v, targets, scale,
+                              interpret=interpret)
+    er2 = streamed_er2(h.astype(jnp.float32), w, targets,
+                       scale.astype(jnp.float32), r_v, vocab_chunk)
+    hr = h.astype(jnp.float32) @ r_h.astype(jnp.float32)
+    return hr.T @ er2

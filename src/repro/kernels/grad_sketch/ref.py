@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the grad_sketch kernel: materializes the softmax
+error matrix directly (O(N*V) memory — test sizes only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grad_sketch_ref(h, w, r_h, r_v, targets, scale):
+    h32 = h.astype(jnp.float32)
+    logits = h32 @ w.astype(jnp.float32)
+    p = jax.nn.softmax(logits, axis=-1)
+    e = p - jax.nn.one_hot(targets, w.shape[1], dtype=jnp.float32)
+    e = e * scale.astype(jnp.float32)[:, None]
+    return (h32 @ r_h.astype(jnp.float32)).T @ (e @ r_v.astype(jnp.float32))

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: tiled Gram matrix  K = G G^T  with fp32 accumulation.
+
+This is the one O(n^2 D) operation in Gram-space OMP (core/gm.py); inputs
+are bf16/fp32 unit-gradient sketches (n, D).  Tiling: (ti, tj) output
+tiles, sequential accumulation over D tiles in VMEM scratch; MXU-aligned
+defaults ti=tj=256, td=512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_kernel(gi_ref, gj_ref, out_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = gi_ref[...].astype(jnp.float32)
+    b = gj_ref[...].astype(jnp.float32)
+    acc_ref[...] += a @ b.T
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("ti", "tj", "td", "interpret"))
+def omp_gram(g, *, ti: int = 256, tj: int = 256, td: int = 512,
+             interpret: bool = True) -> jax.Array:
+    """g: (n, D) -> (n, n) fp32 Gram matrix."""
+    n, D = g.shape
+    ti = min(ti, n)
+    tj = min(tj, n)
+    td = min(td, D)
+    n_pad = (-n) % max(ti, tj)
+    d_pad = (-D) % td
+    gp = jnp.pad(g, ((0, n_pad), (0, d_pad)))
+    Np, Dp = gp.shape
+    grid = (Np // ti, Np // tj, Dp // td)
+
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, td), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tj, td), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((ti, tj), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Np, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((ti, tj), jnp.float32)],
+        interpret=interpret,
+    )(gp, gp)
+    return out[:n, :n]

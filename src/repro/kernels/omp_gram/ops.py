@@ -1,0 +1,19 @@
+"""jit'd wrapper: Pallas on TPU / interpret for validation, XLA elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.omp_gram.kernel import omp_gram as _pallas_gram
+from repro.kernels.omp_gram.ref import omp_gram_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def omp_gram_op(g, *, use_pallas: bool = None, interpret: bool = None):
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        return _pallas_gram(g, interpret=interpret)
+    return omp_gram_ref(g)

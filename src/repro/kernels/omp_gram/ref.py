@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for omp_gram."""
+import jax.numpy as jnp
+
+
+def omp_gram_ref(g):
+    g32 = g.astype(jnp.float32)
+    return g32 @ g32.T

@@ -1,0 +1,25 @@
+"""jit'd wrapper: Pallas chunked WKV on TPU, jnp chunked path elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_wkv as _pallas_wkv
+from repro.models.rwkv6 import wkv_chunked
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rwkv6_wkv_op(r, k, v, w, u, *, use_pallas: bool = None,
+                 interpret: bool = None, chunk: int = 64):
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        return _pallas_wkv(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    B, S, H, N = r.shape
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    return wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                       v.astype(jnp.float32), w.astype(jnp.float32), u, s0,
+                       chunk=chunk)

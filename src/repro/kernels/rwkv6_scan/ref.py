@@ -1,0 +1,11 @@
+"""Oracle: the sequential WKV scan from models/rwkv6.py."""
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import wkv_scan
+
+
+def rwkv6_wkv_ref(r, k, v, w, u):
+    B, S, H, N = r.shape
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    return wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32), w.astype(jnp.float32), u, s0)

@@ -1,0 +1,20 @@
+"""jit'd wrapper with backend fallback (jnp band attention off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.swa_attn.kernel import swa_attn as _pallas_swa
+from repro.kernels.swa_attn.ref import swa_attn_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def swa_attn_op(q, k, v, *, window: int, use_pallas: bool = None,
+                interpret: bool = None):
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        return _pallas_swa(q, k, v, window=window, interpret=interpret)
+    return swa_attn_ref(q, k, v, window=window)

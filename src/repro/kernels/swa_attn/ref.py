@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: masked dense sliding-window attention."""
+import jax
+import jax.numpy as jnp
+
+
+def swa_attn_ref(q, k, v, *, window: int):
+    B, H, S, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = (qp - kp >= 0) & (qp - kp < window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

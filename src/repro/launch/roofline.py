@@ -1,0 +1,144 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (brief-specified).
+
+Per (arch, shape, mesh) cell, from the compiled per-device program:
+  compute_term    = HLO_FLOPs_per_device / peak_FLOPs
+  memory_term     = HLO_bytes_per_device / HBM_bw
+  collective_term = wire_bytes_per_device / ICI_bw
+(cost_analysis of an SPMD-partitioned module reports the single-device
+program; wire bytes use the per-op ring models in dryrun.parse_collectives)
+
+Also reported: MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per device
+per step, and the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches
+remat/redundancy waste; > 1 would indicate XLA undercounting, < 1/3-ish
+indicates heavy recompute).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config, get_shape
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (one link assumed per the brief)
+
+
+def model_flops(arch: str, shape_name: str, step: str) -> float:
+    """Ideal model FLOPs per step (global): 6*N*D for training,
+    2*N*D for prefill, 2*N*tokens for decode (one token per sequence)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n_active = cfg.n_active_params()
+    if step == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if step == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch            # decode: 1 new token per seq
+    return 2.0 * n_active * tokens
+
+
+def ideal_decode_bytes(arch: str, shape_name: str, n_dev: int) -> float:
+    """Decode is memory-bound by construction: the floor per step is
+    reading the active params (bf16) + the KV/state cache once."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    params_b = cfg.n_active_params() * 2
+    cache_b = 0.0
+    for kind in cfg.layer_kinds():
+        if kind in ("attn", "global"):
+            cache_b += (shape.global_batch * shape.seq_len * cfg.kv_dim
+                        * 2 * 2)
+        elif kind == "local":
+            cache_b += (shape.global_batch * min(cfg.window or shape.seq_len,
+                                                 shape.seq_len)
+                        * cfg.kv_dim * 2 * 2)
+        elif kind == "rwkv":
+            cache_b += (shape.global_batch * cfg.n_heads
+                        * cfg.rwkv_head_dim ** 2 * 4)
+        elif kind == "rec":
+            cache_b += shape.global_batch * (cfg.lru_width or cfg.d_model) * 4
+    return (params_b + cache_b) / n_dev
+
+
+def roofline_terms(rec: Dict) -> Dict:
+    n_dev = rec["n_devices"]
+    flops = rec.get("flops") or 0.0
+    bytes_acc = rec.get("bytes_accessed") or 0.0
+    wire = sum(c["wire_bytes"] for c in rec["collectives"].values())
+    compute_t = flops / PEAK_FLOPS
+    memory_t = bytes_acc / HBM_BW
+    coll_t = wire / ICI_BW
+    mf = model_flops(rec["arch"], rec["shape"], rec["step"])
+    mf_per_dev = mf / n_dev
+    bound = max(compute_t, memory_t, coll_t, 1e-30)
+    if rec["step"] == "decode":
+        # decode roofline = ideal HBM traffic (params + cache once) vs bound
+        ideal_t = ideal_decode_bytes(rec["arch"], rec["shape"],
+                                     n_dev) / HBM_BW
+        frac = ideal_t / bound
+    else:
+        frac = (mf_per_dev / PEAK_FLOPS) / bound
+    terms = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": max(
+            [("compute", compute_t), ("memory", memory_t),
+             ("collective", coll_t)], key=lambda kv: kv[1])[0],
+        "model_flops_per_dev": mf_per_dev,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": (mf_per_dev / flops) if flops else None,
+        "bound_s": bound,
+        "roofline_fraction": frac,
+        # CPU-backend caveat (DESIGN.md §6): XLA-CPU promotes bf16 matmuls
+        # to f32, so HLO traffic for semantically-bf16 tensors is ~2x the
+        # TPU value; adjusted terms assume bf16 on the wire/HBM.
+        "memory_s_bf16adj": memory_t / 2.0,
+        "collective_s_bf16adj": coll_t / 2.0,
+    }
+    return terms
+
+
+def load_artifacts(art_dir: str = "artifacts/dryrun") -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skip" or "n_devices" not in rec:
+            continue
+        rec["terms"] = roofline_terms(rec)
+        out.append(rec)
+    return out
+
+
+def table(art_dir: str = "artifacts/dryrun", mesh: Optional[str] = None
+          ) -> str:
+    rows = [r for r in load_artifacts(art_dir)
+            if mesh is None or r["mesh"] == mesh]
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':10s} {'step':7s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'domin':>7s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        t = r["terms"]
+        mesh_tag = "multi" if "multi" in r["mesh"] else "single"
+        ur = f"{t['useful_ratio']:.2f}" if t["useful_ratio"] else "n/a"
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {mesh_tag:10s} "
+            f"{r['step']:7s} {t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+            f"{t['collective_s']:10.4f} {t['dominant']:>7s} {ur:>7s} "
+            f"{100*t['roofline_fraction']:6.1f}%")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    print(table(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"))

@@ -1,0 +1,87 @@
+"""Dry-run sweep driver: every (arch x shape) cell on the single-pod and
+multi-pod meshes, each in a fresh subprocess (jax device count is locked at
+first init).  Results -> artifacts/dryrun/*.json; skips recorded too.
+
+  python -m repro.launch.sweep [--only arch] [--mesh single|multi|both]
+                               [--jobs N] [--timeout S]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import cells
+
+ART = "artifacts/dryrun"
+
+
+def cell_path(arch: str, shape: str, mesh: str) -> str:
+    return os.path.join(ART, f"{arch}__{shape}__{mesh}.json")
+
+
+def run_one(arch: str, shape: str, mesh: str, timeout: int) -> str:
+    out = cell_path(arch, shape, mesh)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out]
+    if mesh == "multi":
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    t0 = time.time()
+    try:
+        p = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout, env=env)
+    except subprocess.TimeoutExpired:
+        return f"TIMEOUT after {timeout}s"
+    if p.returncode != 0:
+        tail = "\n".join(p.stderr.strip().splitlines()[-15:])
+        return f"FAIL ({time.time()-t0:.0f}s):\n{tail}"
+    return f"ok ({time.time()-t0:.0f}s)"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    os.makedirs(ART, exist_ok=True)
+    todo = []
+    for arch, shape, status in cells(include_skips=True):
+        if args.only and arch != args.only:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        if status == "skip":
+            with open(cell_path(arch, shape, "skipped"), "w") as f:
+                json.dump({"arch": arch, "shape": shape, "status": "skip",
+                           "reason": "full-attention arch at 500k context "
+                                     "(DESIGN.md §4)"}, f)
+            continue
+        for mesh in meshes:
+            if not args.force and os.path.exists(cell_path(arch, shape, mesh)):
+                continue
+            todo.append((arch, shape, mesh))
+    print(f"{len(todo)} cells to run")
+    failures = 0
+    for i, (arch, shape, mesh) in enumerate(todo):
+        msg = run_one(arch, shape, mesh, args.timeout)
+        print(f"[{i+1}/{len(todo)}] {arch} x {shape} x {mesh}: {msg}",
+              flush=True)
+        if not msg.startswith("ok"):
+            failures += 1
+    print(f"done; {failures} failures")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Attention: GQA/MQA/MHA; full-causal, sliding-window (band), hybrid
+local:global, prefix-LM; train/prefill (optionally blockwise-"flash") and
+single-step decode against full or ring KV caches.
+
+Design notes (DESIGN.md §5):
+  * masked-full-scan flash keeps XLA compile O(1) in sequence length;
+  * sliding-window uses an O(S·(W+C)) band gather, not O(S²) masking;
+  * caches carry an explicit per-slot position vector so full and ring
+    caches share one masking rule (pos < 0 -> invalid slot).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    IDENTITY_SHARDER,
+    Sharder,
+    apply_rope,
+    dense_init,
+    rms_norm,
+    split,
+)
+
+NEG_INF = -1e30
+FLASH_THRESHOLD = 4096      # Sq*avg_Sk above which the kv-block scan is used
+KV_BLOCK = 512
+Q_BLOCK = 1024
+
+MaskFn = Callable[[jax.Array, jax.Array], jax.Array]   # (q_pos, kv_pos) -> bool
+
+
+# ---------------------------------------------------------------------------
+# Mask functions
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_pos, kv_pos):
+    return q_pos[..., :, None] >= kv_pos[..., None, :]
+
+
+def window_mask(window: int) -> MaskFn:
+    def fn(q_pos, kv_pos):
+        d = q_pos[..., :, None] - kv_pos[..., None, :]
+        return (d >= 0) & (d < window)
+    return fn
+
+
+def prefix_lm_mask(n_prefix: int) -> MaskFn:
+    """Bidirectional within the first ``n_prefix`` positions, causal after."""
+    def fn(q_pos, kv_pos):
+        causal = q_pos[..., :, None] >= kv_pos[..., None, :]
+        in_prefix = kv_pos[..., None, :] < n_prefix
+        return causal | in_prefix
+    return fn
+
+
+def bidir_mask(q_pos, kv_pos):
+    return jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], kv_pos.shape[-1]), bool)
+
+
+def _valid(kv_pos):
+    return kv_pos >= 0
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attn_params(key, cfg, d_kv_src: Optional[int] = None) -> Dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    d_kv_src = d_kv_src or d
+    ks = split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, qd),
+        "wk": dense_init(ks[1], d_kv_src, kvd),
+        "wv": dense_init(ks[2], d_kv_src, kvd),
+        "wo": dense_init(ks[3], qd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,))
+        p["k_norm"] = jnp.zeros((cfg.head_dim,))
+    return p
+
+
+def _project_qkv(params, cfg, x, kv_x, q_pos, kv_pos, rope: bool):
+    """-> q (B,Sq,KV,G,hd), k,v (B,Sk,KV,hd)."""
+    B, Sq, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, Sq, H, hd)
+    k = (kv_x @ params["wk"].astype(dt)).reshape(B, kv_x.shape[1], KV, hd)
+    v = (kv_x @ params["wv"].astype(dt)).reshape(B, kv_x.shape[1], KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+    q = q.reshape(B, Sq, KV, H // KV, hd)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Core grouped attention (materialized scores)
+# ---------------------------------------------------------------------------
+
+def _mha_full(q, k, v, mask, scale):
+    # q: (B,Sq,KV,G,hd) k,v: (B,Sk,KV,hd) mask: (B?,Sq,Sk) bool
+    # bf16 inputs, fp32 accumulation (MXU-native mixed precision)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    while mask.ndim < scores.ndim:
+        mask = mask[:, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out
+
+
+def _mha_flash(q, k, v, q_pos, kv_pos, mask_fn, scale, block=KV_BLOCK):
+    """Online-softmax scan over kv blocks; numerically matches _mha_full."""
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    n_blocks = -(-Sk // block)
+    pad = n_blocks * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kb = k.reshape(B, n_blocks, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos.reshape(B, n_blocks, block).transpose(1, 0, 2)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk
+        # bf16 operands, fp32 accumulation: collectives that move k/v (and
+        # their cotangents) stay in bf16 (§Perf iter 5)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = mask_fn(q_pos, pc) & _valid(pc)[..., None, :]   # (B,Sq,block)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(q.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    # remat the step: backward recomputes the (.., Sq, block) score matrix
+    # instead of saving one per kv block (perf iteration, §Perf)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)      # (B,Sq,KV,G,hd)
+
+
+def _mha_band(q, k, v, q_pos, kv_pos, window, scale, q_block=Q_BLOCK):
+    """Sliding-window attention via per-q-block band gather: O(S*(W+C))."""
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    C = min(q_block, Sq)
+    nq = -(-Sq // C)
+    band = window + C
+    if Sk < band:   # short sequence: full path is cheaper/correct
+        mask = window_mask(window)(q_pos, kv_pos) & _valid(kv_pos)[..., None, :]
+        return _mha_full(q, k, v, mask, scale)
+
+    qb = q.reshape(B, nq, C, KV, G, hd)
+
+    def one_block(i):
+        start = jnp.clip(i * C + C - band, 0, Sk - band)
+        kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        pc = jax.lax.dynamic_slice_in_dim(kv_pos, start, band, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * C, C, axis=1)
+        mask = window_mask(window)(qp, pc) & _valid(pc)[..., None, :]
+        return _mha_full(qb[:, i], kc, vc, mask, scale)
+
+    outs = jax.lax.map(one_block, jnp.arange(nq))            # (nq,B,C,KV,G,hd)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, hd)
+
+
+# ---------------------------------------------------------------------------
+# Public train/prefill forward
+# ---------------------------------------------------------------------------
+
+def attn_forward(
+    params,
+    cfg,
+    x: jax.Array,                      # (B,Sq,d)
+    *,
+    kind: str = "attn",                # attn | local | global | cross | bidir
+    mask_fn: Optional[MaskFn] = None,
+    kv_x: Optional[jax.Array] = None,  # cross attention source
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    shard: Sharder = IDENTITY_SHARDER,
+) -> jax.Array:
+    B, Sq, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    Sk = kv_x.shape[1]
+    q_pos = (jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+             if q_positions is None else q_positions)
+    kv_pos = (jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+              if kv_positions is None else kv_positions)
+    rope = kind != "cross"
+    q, k, v = _project_qkv(params, cfg, x, kv_x, q_pos, kv_pos, rope)
+    # perf iteration 1 (EXPERIMENTS.md §Perf): repeat KV heads so the
+    # grouped head axis aligns with the TP degree; scores then shard over
+    # heads instead of requiring per-block all-reduces over head_dim
+    rep = shard.kv_repeat(cfg.n_heads, cfg.n_kv_heads)
+    if rep > 1:
+        KV, G, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.head_dim
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        q = q.reshape(B, Sq, KV * rep, G // rep, hd)
+    q = shard(q, "act_q")
+    k = shard(k, "act_kv")
+    v = shard(v, "act_kv")
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+
+    if mask_fn is None:
+        mask_fn = {
+            "attn": causal_mask, "global": causal_mask,
+            "local": window_mask(cfg.window) if cfg.window else causal_mask,
+            "cross": bidir_mask, "bidir": bidir_mask,
+        }[kind]
+
+    if kind == "local" and cfg.window and Sq == Sk and Sq > cfg.window + Q_BLOCK:
+        out = _mha_band(q, k, v, q_pos, kv_pos, cfg.window, scale)
+    elif Sq * Sk > FLASH_THRESHOLD ** 2:
+        out = _mha_flash(q, k, v, q_pos, kv_pos, mask_fn, scale)
+    else:
+        mask = mask_fn(q_pos, kv_pos) & _valid(kv_pos)[..., None, :]
+        out = _mha_full(q, k, v, mask, scale)
+    out = out.reshape(B, Sq, cfg.q_dim)
+    out = shard(out, "act_q_flat")
+    return out @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, length: int, window: bool, dtype=jnp.bfloat16):
+    """``length`` = full context for global/full layers, window size for local.
+    ``pos`` holds the absolute position stored in each slot (-1 = empty)."""
+    L = min(length, cfg.window) if (window and cfg.window) else length
+    return {
+        "k": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, L), -1, jnp.int32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_write(cache, k_new, v_new, pos_new):
+    """Write one step (Sq=1) at ring/full slot derived from cache['t']."""
+    L = cache["k"].shape[1]
+    slot = cache["t"] % L
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos_new.astype(jnp.int32), slot, axis=1)
+    return {"k": k, "v": v, "pos": pos, "t": cache["t"] + 1}
+
+
+def cache_prefill(cache, k_all, v_all, pos_all):
+    """Bulk-fill after prefill: keeps the last L positions."""
+    L = cache["k"].shape[1]
+    S = k_all.shape[1]
+    if S >= L:
+        # keep last L positions, placed at their natural ring slots
+        # (position p -> slot p % L) so subsequent writes evict oldest-first
+        shift = (S - L) % L
+        sl = lambda a: jnp.roll(a[:, S - L:], shift, axis=1)
+        return {"k": sl(k_all).astype(cache["k"].dtype),
+                "v": sl(v_all).astype(cache["v"].dtype),
+                "pos": sl(pos_all).astype(jnp.int32),
+                "t": jnp.asarray(S, jnp.int32)}
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_all.astype(cache["k"].dtype), 0, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_all.astype(cache["v"].dtype), 0, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos_all.astype(jnp.int32), 0, axis=1)
+    return {"k": k, "v": v, "pos": pos, "t": jnp.asarray(S, jnp.int32)}
+
+
+def attn_decode(
+    params, cfg, x_t: jax.Array, cache, *, kind: str = "attn",
+    mask_fn: Optional[MaskFn] = None, shard: Sharder = IDENTITY_SHARDER,
+):
+    """One decode step.  x_t: (B,1,d).  Returns (out (B,1,d), new cache)."""
+    B = x_t.shape[0]
+    t = cache["t"]
+    q_pos = jnp.broadcast_to(t, (B, 1))
+    q, k_new, v_new = _project_qkv(params, cfg, x_t, x_t, q_pos, q_pos, True)
+    cache = cache_write(cache, k_new.astype(cache["k"].dtype),
+                        v_new.astype(cache["v"].dtype), q_pos)
+    k, v, kv_pos = cache["k"], cache["v"], cache["pos"]
+    if mask_fn is None:
+        mask_fn = window_mask(cfg.window) if (kind == "local" and cfg.window) \
+            else causal_mask
+    mask = mask_fn(q_pos, kv_pos) & _valid(kv_pos)[..., None, :]
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+    out = _mha_full(q, k.astype(q.dtype), v.astype(q.dtype), mask, scale)
+    out = out.reshape(B, 1, cfg.q_dim)
+    return out @ params["wo"].astype(x_t.dtype), cache

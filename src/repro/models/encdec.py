@@ -1,0 +1,155 @@
+"""Encoder-decoder transformer backbone (SeamlessM4T-medium cell).
+
+Encoder: bidirectional attention over precomputed frame embeddings (the
+speech frontend is a stub per the brief).  Decoder: causal self-attention +
+cross-attention + FFN.  Both stacks are scanned (one compiled body each).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models.common import (
+    IDENTITY_SHARDER,
+    Sharder,
+    dense_init,
+    embed_init,
+    rms_norm,
+    split,
+)
+
+
+def _init_enc_layer(key, cfg):
+    ks = split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "attn": attn.init_attn_params(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,)),
+        "mlp": ffn_mod.init_ffn_params(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_type),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ks = split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "self": attn.init_attn_params(ks[0], cfg),
+        "lnx": jnp.zeros((cfg.d_model,)),
+        "cross": attn.init_attn_params(ks[1], cfg),
+        "ln2": jnp.zeros((cfg.d_model,)),
+        "mlp": ffn_mod.init_ffn_params(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_type),
+    }
+
+
+def init_params(cfg, key) -> Dict:
+    ks = split(key, cfg.n_enc_layers + cfg.n_layers + 2)
+    enc = [_init_enc_layer(ks[i], cfg) for i in range(cfg.n_enc_layers)]
+    dec = [_init_dec_layer(ks[cfg.n_enc_layers + i], cfg)
+           for i in range(cfg.n_layers)]
+    stack = lambda ls: jax.tree.map(lambda *xs: jnp.stack(xs), *ls)
+    params = {
+        "embed": {"w": embed_init(ks[-1], cfg.vocab_size, cfg.d_model)},
+        "encoder": stack(enc),
+        "decoder": stack(dec),
+        "enc_norm": jnp.zeros((cfg.d_model,)),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(ks[-2], cfg.d_model, cfg.vocab_size)}
+    return params
+
+
+def encode(params, cfg, frames, *, shard: Sharder = IDENTITY_SHARDER,
+           remat: bool = True):
+    """frames: (B, T, d) stub frontend embeddings -> (B, T, d)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(xx, lp):
+        from repro.models.transformer import cast_block_params
+        lp = cast_block_params(lp, cfg)
+        h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+        xx = xx + attn.attn_forward(lp["attn"], cfg, h, kind="bidir",
+                                    shard=shard)
+        h2 = rms_norm(xx, lp["ln2"], cfg.norm_eps)
+        xx = xx + ffn_mod.ffn_forward(lp["mlp"], h2, cfg.ffn_type, shard=shard)
+        return shard(xx, "act_bsd"), None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, cfg, tokens, enc_out, *,
+                 shard: Sharder = IDENTITY_SHARDER, remat: bool = True,
+                 collect_cache: bool = False, cache_len: int = 0):
+    """Teacher-forced decoder pass.  Returns (hidden (B,U,d), cache|None)."""
+    from repro.models.transformer import embed_tokens  # avoid cycle
+    x = embed_tokens(params, cfg, tokens)
+    B, U, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(U), (B, U))
+
+    def body(xx, lp):
+        from repro.models.transformer import cast_block_params
+        lp = cast_block_params(lp, cfg)
+        h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+        xx = xx + attn.attn_forward(lp["self"], cfg, h, kind="attn",
+                                    q_positions=pos, kv_positions=pos,
+                                    shard=shard)
+        hx = rms_norm(xx, lp["lnx"], cfg.norm_eps)
+        xx = xx + attn.attn_forward(lp["cross"], cfg, hx, kind="cross",
+                                    kv_x=enc_out, shard=shard)
+        h2 = rms_norm(xx, lp["ln2"], cfg.norm_eps)
+        xx = xx + ffn_mod.ffn_forward(lp["mlp"], h2, cfg.ffn_type, shard=shard)
+        out = None
+        if collect_cache:
+            from repro.models.transformer import _prefill_attn_cache
+            self_cache = _prefill_attn_cache(lp["self"], cfg, h, "attn", pos,
+                                             cache_len)
+            # cross K/V are static during decode: precompute once
+            epos = jnp.broadcast_to(jnp.arange(enc_out.shape[1]),
+                                    (B, enc_out.shape[1]))
+            _, ck, cv = attn._project_qkv(lp["cross"], cfg, hx, enc_out,
+                                          pos, epos, False)
+            out = {"self": self_cache, "ck": ck, "cv": cv}
+        return shard(xx, "act_bsd"), out
+
+    body = jax.checkpoint(body) if remat else body
+    x, caches = jax.lax.scan(body, x, params["decoder"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches
+
+
+def decode_step(params, cfg, x_t, cache, *, shard: Sharder = IDENTITY_SHARDER):
+    """One decoder token.  cache: {"self": kv-cache, "ck","cv"} stacked over
+    layers.  Returns (hidden (B,1,d), new cache)."""
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+
+    def body(xx, xs):
+        lp, c = xs
+        h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+        y, self_cache = attn.attn_decode(lp["self"], cfg, h, c["self"],
+                                         kind="attn", shard=shard)
+        xx = xx + y
+        hx = rms_norm(xx, lp["lnx"], cfg.norm_eps)
+        B = hx.shape[0]
+        q = (hx @ lp["cross"]["wq"].astype(hx.dtype)).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["cross"]["q_norm"], cfg.norm_eps)
+        q = q.reshape(B, 1, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads,
+                      cfg.head_dim)
+        mask = jnp.ones((B, 1, c["ck"].shape[1]), bool)
+        y = attn._mha_full(q, c["ck"].astype(q.dtype), c["cv"].astype(q.dtype),
+                           mask, scale)
+        xx = xx + y.reshape(B, 1, cfg.q_dim) @ lp["cross"]["wo"].astype(hx.dtype)
+        h2 = rms_norm(xx, lp["ln2"], cfg.norm_eps)
+        xx = xx + ffn_mod.ffn_forward(lp["mlp"], h2, cfg.ffn_type, shard=shard)
+        return xx, dict(c, self=self_cache)
+
+    x, new_cache = jax.lax.scan(body, x_t, (params["decoder"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache

@@ -1,0 +1,34 @@
+"""Dense FFN variants: SwiGLU / GeGLU (gated) and GELU / squared-ReLU."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.models.common import IDENTITY_SHARDER, Sharder, dense_init, ffn_act, split
+
+
+def is_gated(ffn_type: str) -> bool:
+    return ffn_type in ("swiglu", "geglu")
+
+
+def init_ffn_params(key, d_model: int, d_ff: int, ffn_type: str) -> Dict:
+    ks = split(key, 3)
+    p = {"w_in": dense_init(ks[0], d_model, d_ff),
+         "w_out": dense_init(ks[1], d_ff, d_model)}
+    if is_gated(ffn_type):
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff)
+    return p
+
+
+def ffn_forward(params, x, ffn_type: str, shard: Sharder = IDENTITY_SHARDER):
+    dt = x.dtype
+    act = ffn_act(ffn_type)
+    h = x @ params["w_in"].astype(dt)
+    if is_gated(ffn_type):
+        g = x @ params["w_gate"].astype(dt)
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = shard(h, "act_ff")
+    return h @ params["w_out"].astype(dt)

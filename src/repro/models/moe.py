@@ -1,0 +1,112 @@
+"""Top-k Mixture-of-Experts with GShard-style capacity dispatch.
+
+Tokens are grouped (``group_size``); per group, each expert accepts up to
+``capacity = ceil(cf * group * top_k / E)`` tokens.  Dispatch/combine are
+one-hot einsums so expert parallelism lowers to an explicit all-to-all in
+the compiled HLO (visible to the roofline collective parser).
+
+Router: full softmax -> top-k -> renormalize (Mixtral style).  Load-balance
+auxiliary loss per Switch Transformer [arXiv:2101.03961].
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import IDENTITY_SHARDER, Sharder, dense_init, ffn_act, split
+from repro.models.ffn import is_gated
+
+DEFAULT_GROUP = 2048
+
+
+def init_moe_params(key, d_model: int, moe_cfg, ffn_type: str) -> Dict:
+    E, dff = moe_cfg.n_experts, moe_cfg.d_ff_expert
+    ks = split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d_model, E),
+        "w_in": jax.vmap(lambda k: dense_init(k, d_model, dff))(
+            jax.random.split(ks[1], E)),
+        "w_out": jax.vmap(lambda k: dense_init(k, dff, d_model))(
+            jax.random.split(ks[2], E)),
+    }
+    if is_gated(ffn_type):
+        p["w_gate"] = jax.vmap(lambda k: dense_init(k, d_model, dff))(
+            jax.random.split(ks[3], E))
+    return p
+
+
+def _topk_dispatch(gates: jax.Array, top_k: int, capacity: int):
+    """gates: (G, S, E) softmax probs.  Returns dispatch (G,S,E,C) bf16-able
+    mask and combine (G,S,E,C) weights, plus load-balance aux loss."""
+    G, S, E = gates.shape
+    # top-k selection, iteratively to keep position bookkeeping exact
+    remaining = gates
+    counts = jnp.zeros((G, E), jnp.int32)
+    dispatch = jnp.zeros((G, S, E, capacity), gates.dtype)
+    combine = jnp.zeros((G, S, E, capacity), gates.dtype)
+    topk_sum = jnp.zeros((G, S), gates.dtype)
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)                    # (G,S)
+        w = jnp.take_along_axis(remaining, idx[..., None], -1)[..., 0]
+        onehot = jax.nn.one_hot(idx, E, dtype=gates.dtype)      # (G,S,E)
+        pos = counts[:, None, :] + jnp.cumsum(onehot, axis=1).astype(jnp.int32) - 1
+        pos_in_e = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (G,S)
+        keep = pos_in_e < capacity
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, capacity),
+                                capacity, dtype=gates.dtype)    # (G,S,C)
+        d = onehot[..., None] * pos_oh[:, :, None, :]           # (G,S,E,C)
+        dispatch = dispatch + d
+        combine = combine + d * w[..., None, None]
+        topk_sum = topk_sum + w * keep.astype(gates.dtype)
+        counts = counts + jnp.sum(onehot * keep[..., None], axis=1).astype(jnp.int32)
+        remaining = remaining * (1.0 - onehot)
+    # renormalize combine weights over the selected experts
+    combine = combine / jnp.maximum(topk_sum, 1e-9)[..., None, None]
+    return dispatch, combine
+
+
+def moe_forward(
+    params, cfg, x: jax.Array, shard: Sharder = IDENTITY_SHARDER,
+    group_size: int = DEFAULT_GROUP, decode: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (out (B,S,d), aux_loss scalar).  ``decode`` uses a
+    no-drop capacity (= group size) so single-token steps match training
+    routing exactly."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    dt = x.dtype
+    tokens = B * S
+    g = min(group_size, tokens)
+    n_groups = tokens // g
+    assert n_groups * g == tokens, (tokens, g)
+    xg = x.reshape(n_groups, g, d)
+
+    logits = (xg @ params["router"].astype(dt)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                     # (G,S,E)
+    capacity = (g if decode else
+                max(1, int(moe.capacity_factor * g * moe.top_k / moe.n_experts)))
+    dispatch, combine = _topk_dispatch(gates.astype(dt), moe.top_k, capacity)
+    dispatch = shard(dispatch, "moe_dispatch")
+
+    # (G,S,E,C),(G,S,d) -> (E,G,C,d): the all-to-all boundary under EP
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    expert_in = shard(expert_in, "moe_expert_in")
+    h = jnp.einsum("egcd,edf->egcf", expert_in, params["w_in"].astype(dt))
+    act = ffn_act(cfg.ffn_type)
+    if "w_gate" in params:
+        gt = jnp.einsum("egcd,edf->egcf", expert_in, params["w_gate"].astype(dt))
+        h = act(gt) * h
+    else:
+        h = act(h)
+    out_e = jnp.einsum("egcf,efd->egcd", h, params["w_out"].astype(dt))
+    out_e = shard(out_e, "moe_expert_out")
+    out = jnp.einsum("gsec,egcd->gsd", combine, out_e)
+
+    # Switch-style load balancing aux loss
+    density = jnp.mean(dispatch.sum(-1), axis=1)                # (G,E) frac routed
+    router_prob = jnp.mean(gates, axis=1)                       # (G,E)
+    aux = moe.n_experts * jnp.mean(
+        jnp.sum(density.astype(jnp.float32) * router_prob, axis=-1))
+    return out.reshape(B, S, d), aux * moe.router_aux_coef

@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Block: x -> (linear -> causal depthwise conv(width 4) -> RG-LRU) gated by a
+parallel GeLU branch -> output projection.
+
+RG-LRU:  r_t = sigmoid(W_a x_t + b_a)   (recurrence gate)
+         i_t = sigmoid(W_x x_t + b_x)   (input gate)
+         log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over the sequence; decode carries
+(h, conv window) state.  sqrt(1-a^2) computed as sqrt(-expm1(2 log a)).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split
+
+RGLRU_C = 8.0
+
+
+def init_rglru_params(key, d_model: int, width: int, conv_width: int) -> Dict:
+    ks = split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d_model, width),
+        "w_gate_branch": dense_init(ks[1], d_model, width),
+        "conv_w": jax.random.normal(ks[2], (conv_width, width)) * 0.1,
+        "conv_b": jnp.zeros((width,)),
+        "wa": dense_init(ks[3], width, width),
+        "ba": jnp.zeros((width,)),
+        "wx": dense_init(ks[4], width, width),
+        "bx": jnp.zeros((width,)),
+        "lam": jnp.linspace(0.3, 1.7, width),    # softplus(lam) spread
+        "w_out": dense_init(ks[5], width, d_model),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jax.Array] = None):
+    """Depthwise causal conv via shifted adds.  x: (B,S,w); state: (B,cw-1,w)
+    holds the trailing inputs from the previous segment (decode)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+cw-1, w)
+    out = sum(xp[:, i : i + x.shape[1]] * w[cw - 1 - i].astype(x.dtype)
+              for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else jnp.zeros_like(pad)
+    return out + b.astype(x.dtype), new_state
+
+
+def _rg_lru(x, r, i, lam, h0: Optional[jax.Array]):
+    """x,r,i: (B,S,w) fp32.  Returns (h (B,S,w), h_last (B,w))."""
+    log_a = -RGLRU_C * jax.nn.softplus(lam) * r                  # <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 0.0)) * (i * x)
+    if h0 is not None:
+        # fold carried state in as a virtual step at t=-1 with a=1,b=h0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None].astype(gated.dtype), gated], axis=1)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh, hh[:, -1]
+
+
+def rglru_forward(p, cfg, x, state=None) -> Tuple[jax.Array, Dict]:
+    """x: (B,S,d).  state: {"h": (B,w), "conv": (B,cw-1,w)} or None.
+    Returns (out (B,S,d), new_state)."""
+    dt = x.dtype
+    u = x @ p["w_in"].astype(dt)
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt))
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u32 @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(u32 @ p["wx"].astype(jnp.float32) + p["bx"])
+    h0 = None if state is None else state["h"]
+    h, h_last = _rg_lru(u32, r, i, p["lam"], h0)
+    out = (h.astype(dt) * gate) @ p["w_out"].astype(dt)
+    # recurrent state is carried fp32 across decode steps
+    return out, {"h": h_last.astype(jnp.float32),
+                 "conv": new_conv.astype(jnp.float32)}
+
+
+def init_rglru_state(batch: int, width: int, conv_width: int):
+    return {"h": jnp.zeros((batch, width), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, width), jnp.float32)}

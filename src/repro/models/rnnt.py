@@ -1,0 +1,171 @@
+"""The paper's own architecture: CRDNN RNN-Transducer (SpeechBrain
+Librispeech transducer recipe; Graves 2012, Ravanelli et al. 2021).
+
+Transcription network: 2 CNN blocks (3x3, stride 2x2) -> 4 bi-LSTM layers
+-> 2 DNN layers.  Prediction network: embedding + 1-layer GRU.  Joint
+network: Linear(enc) + Linear(pred) -> tanh -> Linear to vocab (the layer
+whose gradient PGM matches).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, embed_init, split
+
+
+# ---------------------------------------------------------------------------
+# Recurrent cells (lax.scan)
+# ---------------------------------------------------------------------------
+
+def init_lstm(key, d_in, d_h):
+    ks = split(key, 2)
+    return {"wx": dense_init(ks[0], d_in, 4 * d_h),
+            "wh": dense_init(ks[1], d_h, 4 * d_h),
+            "b": jnp.zeros((4 * d_h,))}
+
+
+def lstm_scan(p, x, reverse=False):
+    """x: (B,T,d_in) -> (B,T,d_h)."""
+    B, T, _ = x.shape
+    d_h = p["wh"].shape[0]
+    xw = x @ p["wx"].astype(x.dtype) + p["b"].astype(x.dtype)
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt + h @ p["wh"].astype(xt.dtype)
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((B, d_h), x.dtype)
+    _, hs = jax.lax.scan(step, (h0, h0), jnp.moveaxis(xw, 1, 0),
+                         reverse=reverse)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def init_gru(key, d_in, d_h):
+    ks = split(key, 2)
+    return {"wx": dense_init(ks[0], d_in, 3 * d_h),
+            "wh": dense_init(ks[1], d_h, 3 * d_h),
+            "b": jnp.zeros((3 * d_h,))}
+
+
+def gru_scan(p, x, h0=None):
+    B, T, _ = x.shape
+    d_h = p["wh"].shape[0]
+    xw = x @ p["wx"].astype(x.dtype) + p["b"].astype(x.dtype)
+
+    def step(h, xt):
+        xr, xz, xn = jnp.split(xt, 3, axis=-1)
+        hr, hz, hn = jnp.split(h @ p["wh"].astype(xt.dtype), 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)
+        n = jnp.tanh(xn + r * hn)
+        h = (1 - z) * n + z * h
+        return h, h
+
+    if h0 is None:
+        h0 = jnp.zeros((B, d_h), x.dtype)
+    h_last, hs = jax.lax.scan(step, h0, jnp.moveaxis(xw, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def gru_step(p, x_t, h):
+    """Single GRU step for greedy transducer decoding. x_t: (B,d_in)."""
+    y, h_new = gru_scan(p, x_t[:, None], h0=h)
+    return y[:, 0], h_new
+
+
+# ---------------------------------------------------------------------------
+# RNN-T model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key) -> Dict:
+    r = cfg.rnnt
+    ks = split(key, 16)
+    p: Dict = {}
+    c_in = 1
+    for i, c in enumerate(r.cnn_channels):
+        std = 1.0 / jnp.sqrt(9.0 * c_in)
+        p[f"conv{i}"] = {
+            "w": jax.random.normal(ks[i], (3, 3, c_in, c)) * std,
+            "b": jnp.zeros((c,)),
+        }
+        c_in = c
+    feat = r.cnn_channels[-1] * (r.n_feats // 4)
+    d_in = feat
+    for i in range(r.lstm_layers):
+        p[f"lstm{i}_f"] = init_lstm(ks[4 + 2 * i], d_in, r.lstm_hidden)
+        p[f"lstm{i}_b"] = init_lstm(ks[5 + 2 * i], d_in, r.lstm_hidden)
+        d_in = 2 * r.lstm_hidden
+    p["dnn0"] = {"w": dense_init(ks[12], d_in, r.dnn_dim),
+                 "b": jnp.zeros((r.dnn_dim,))}
+    p["dnn1"] = {"w": dense_init(ks[13], r.dnn_dim, r.dnn_dim),
+                 "b": jnp.zeros((r.dnn_dim,))}
+    p["pred_embed"] = {"w": embed_init(ks[14], r.vocab_size, r.pred_embed)}
+    p["pred_gru"] = init_gru(ks[15], r.pred_embed, r.pred_hidden)
+    kj = split(jax.random.fold_in(key, 7), 3)
+    p["joint"] = {
+        "w_enc": dense_init(kj[0], r.dnn_dim, r.joint_dim),
+        "w_pred": dense_init(kj[1], r.pred_hidden, r.joint_dim),
+        "w_out": dense_init(kj[2], r.joint_dim, r.vocab_size),
+    }
+    return p
+
+
+def encode(params, cfg, feats):
+    """feats: (B,T,F) -> (B, T//4, dnn_dim)."""
+    r = cfg.rnnt
+    x = feats[..., None]                                  # (B,T,F,1)
+    for i in range(len(r.cnn_channels)):
+        w, b = params[f"conv{i}"]["w"], params[f"conv{i}"]["b"]
+        x = jax.lax.conv_general_dilated(
+            x, w.astype(x.dtype), window_strides=(2, 2), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + b.astype(x.dtype))
+    B, T4, F4, C = x.shape
+    x = x.reshape(B, T4, F4 * C)
+    for i in range(r.lstm_layers):
+        f = lstm_scan(params[f"lstm{i}_f"], x)
+        bwd = lstm_scan(params[f"lstm{i}_b"], x, reverse=True)
+        x = jnp.concatenate([f, bwd], axis=-1)
+    x = jax.nn.relu(x @ params["dnn0"]["w"].astype(x.dtype)
+                    + params["dnn0"]["b"].astype(x.dtype))
+    x = jax.nn.relu(x @ params["dnn1"]["w"].astype(x.dtype)
+                    + params["dnn1"]["b"].astype(x.dtype))
+    return x
+
+
+def predict(params, cfg, tokens):
+    """tokens: (B,U) -> (B, U+1, pred_hidden): position u conditions on
+    tokens[<u]; position 0 is the blank-start state."""
+    emb = jnp.take(params["pred_embed"]["w"], tokens, axis=0)
+    emb = jnp.pad(emb, ((0, 0), (1, 0), (0, 0)))          # start token = 0
+    g, _ = gru_scan(params["pred_gru"], emb)
+    return g
+
+
+def joint_hidden(params, enc, pred):
+    """(B,T,De),(B,U1,Dp) -> pre-vocab joint activations (B,T,U1,J).
+    This is the activation whose outer product with dL/dlogits forms the
+    joint-network gradient PGM matches."""
+    dt = enc.dtype
+    ze = enc @ params["joint"]["w_enc"].astype(dt)        # (B,T,J)
+    zp = pred @ params["joint"]["w_pred"].astype(dt)      # (B,U1,J)
+    return jnp.tanh(ze[:, :, None, :] + zp[:, None, :, :])
+
+
+def joint_logits(params, z):
+    return z @ params["joint"]["w_out"].astype(z.dtype)
+
+
+def forward(params, cfg, feats, tokens):
+    """-> logits (B, T', U+1, V)."""
+    enc = encode(params, cfg, feats)
+    pred = predict(params, cfg, tokens)
+    z = joint_hidden(params, enc, pred)
+    return joint_logits(params, z)

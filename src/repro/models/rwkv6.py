@@ -1,0 +1,197 @@
+"""RWKV6 "Finch" time-mix and channel-mix [arXiv:2404.05892].
+
+Time-mix: data-dependent token-shift (ddlerp via a small LoRA MLP),
+data-dependent per-channel decay w_t, bonus u, and the WKV linear
+recurrence  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+            y_t = r_t (S_{t-1} + diag(u) k_t^T v_t).
+
+Two execution paths, numerically equivalent (tested):
+  * ``wkv_scan``    — sequential lax.scan (decode / oracle);
+  * ``wkv_chunked`` — chunk-parallel formulation with within-chunk pairwise
+    decays, the TPU-native (MXU-friendly) path mirrored by the
+    ``kernels/rwkv6_scan`` Pallas kernel.  All pairwise exponents are
+    differences of cumulative log-decays with j <= i, hence <= 0: stable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split
+
+TM_EXTRA = 32     # ddlerp lora dim
+TD_EXTRA = 64     # decay lora dim
+CHUNK = 64
+
+
+def init_tmix_params(key, d: int, n_heads: int, head_dim: int) -> Dict:
+    ks = split(key, 12)
+    p = {
+        "mu_x": jnp.zeros((d,)), "mu_w": jnp.zeros((d,)),
+        "mu_k": jnp.zeros((d,)), "mu_v": jnp.zeros((d,)),
+        "mu_r": jnp.zeros((d,)), "mu_g": jnp.zeros((d,)),
+        "ddlerp_w1": dense_init(ks[0], d, 5 * TM_EXTRA, scale=0.1),
+        "ddlerp_w2": (jax.random.normal(ks[1], (5, TM_EXTRA, d)) * 0.01),
+        "decay_base": jnp.full((n_heads, head_dim), -1.0),
+        "decay_w1": dense_init(ks[2], d, TD_EXTRA, scale=0.1),
+        "decay_w2": dense_init(ks[3], TD_EXTRA, n_heads * head_dim, scale=0.1),
+        "bonus": jnp.full((n_heads, head_dim), 0.5),
+        "wr": dense_init(ks[4], d, n_heads * head_dim),
+        "wk": dense_init(ks[5], d, n_heads * head_dim),
+        "wv": dense_init(ks[6], d, n_heads * head_dim),
+        "wg": dense_init(ks[7], d, n_heads * head_dim),
+        "wo": dense_init(ks[8], n_heads * head_dim, d),
+        "ln_g": jnp.ones((n_heads * head_dim,)),
+        "ln_b": jnp.zeros((n_heads * head_dim,)),
+    }
+    return p
+
+
+def init_cmix_params(key, d: int, d_ff: int) -> Dict:
+    ks = split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,)), "mu_r": jnp.zeros((d,)),
+        "wk": dense_init(ks[0], d, d_ff),
+        "wv": dense_init(ks[1], d_ff, d),
+        "wr": dense_init(ks[2], d, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence — sequential oracle
+# ---------------------------------------------------------------------------
+
+def wkv_scan(r, k, v, w, u, state0):
+    """r,k,v: (B,S,H,N); w: (B,S,H,N) decays in (0,1); u: (H,N);
+    state0: (B,H,N,N) keyed [k-dim, v-dim].  Returns (y (B,S,H,N), state)."""
+    B, S, H, N = r.shape
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,N) each
+        a = k_t[..., :, None] * v_t[..., None, :]      # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, S_ + u[..., :, None] * a)
+        S_new = w_t[..., :, None] * S_ + a
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence — chunk-parallel (TPU-native path)
+# ---------------------------------------------------------------------------
+
+def wkv_chunked(r, k, v, w, u, state0, chunk: int = CHUNK):
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    nC = S // C
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, nC, C, H, N).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(f32).reshape(B, nC, C, H, N).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(B, nC, C, H, N).transpose(1, 0, 3, 2, 4)
+    lw = jnp.log(jnp.clip(w.astype(f32), 1e-8, 1.0))
+    lwc = lw.reshape(B, nC, C, H, N).transpose(1, 0, 3, 2, 4)  # (nC,B,H,C,N)
+
+    def chunk_step(S_, inp):
+        rr, kk, vv, lww = inp                           # (B,H,C,N)
+        cum = jnp.cumsum(lww, axis=2)                   # cum_i = sum_{j<=i} lw_j
+        cum_prev = cum - lww                            # sum_{j<i}
+        # inter-chunk: y_i += (r_i * exp(cum_{i-1})) @ S
+        r_dec = rr * jnp.exp(cum_prev)
+        y = jnp.einsum("bhcn,bhnm->bhcm", r_dec, S_)
+        # intra-chunk strict-lower pairwise decays (exponents <= 0)
+        dif = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,H,C,C,N)
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)[None, None, :, :, None]
+        e = jnp.where(mask, jnp.exp(jnp.minimum(dif, 0.0)), 0.0)
+        A = jnp.einsum("bhin,bhjn,bhijn->bhij", rr, kk, e)
+        y = y + jnp.einsum("bhij,bhjm->bhim", A, vv)
+        # diagonal bonus term: y_i += (r_i . (u*k_i)) v_i
+        diag = jnp.einsum("bhcn,bhcn->bhc", rr, kk * u[..., None, :])
+        y = y + diag[..., None] * vv
+        # state update: S' = diag(exp(cum_C)) S + sum_j (k_j exp(cum_C-cum_j))^T v_j
+        tot = cum[:, :, -1:, :]                          # (B,H,1,N)
+        k_dec = kk * jnp.exp(tot - cum)
+        S_new = jnp.exp(tot[:, :, 0, :])[..., :, None] * S_ + \
+            jnp.einsum("bhjn,bhjm->bhnm", k_dec, vv)
+        return S_new, y
+
+    state, ys = jax.lax.scan(chunk_step, state0.astype(f32), (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    return y.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full time-mix / channel-mix blocks
+# ---------------------------------------------------------------------------
+
+def _token_shift(x, x_prev_last=None):
+    """x: (B,S,d) -> previous-token tensor; decode passes carried x_prev."""
+    if x_prev_last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    # carried state is stored fp32; compute in x's dtype to avoid promotion
+    return jnp.concatenate([x_prev_last.astype(x.dtype)[:, None],
+                            x[:, :-1]], axis=1)
+
+
+def tmix_forward(p, cfg, x, state0=None, x_prev=None, chunked=None):
+    """x: (B,S,d).  Returns (y, (wkv_state, last_x))."""
+    B, S, d = x.shape
+    H, N = cfg.n_heads, cfg.rwkv_head_dim
+    dt = x.dtype
+    xp = _token_shift(x, x_prev)
+    sx = xp - x
+    xxx = x + sx * p["mu_x"].astype(dt)
+    lora = jnp.tanh(xxx @ p["ddlerp_w1"].astype(dt))            # (B,S,5*E)
+    lora = lora.reshape(B, S, 5, TM_EXTRA)
+    adj = jnp.einsum("bste,ted->bstd", lora, p["ddlerp_w2"].astype(dt))
+    mus = jnp.stack([p["mu_w"], p["mu_k"], p["mu_v"], p["mu_r"], p["mu_g"]]).astype(dt)
+    xw, xk, xv, xr, xg = [x + sx * (mus[i] + adj[:, :, i]) for i in range(5)]
+
+    r = (xr @ p["wr"].astype(dt)).reshape(B, S, H, N)
+    k = (xk @ p["wk"].astype(dt)).reshape(B, S, H, N)
+    v = (xv @ p["wv"].astype(dt)).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+
+    dd = jnp.tanh(xw @ p["decay_w1"].astype(dt)) @ p["decay_w2"].astype(dt)
+    logit = p["decay_base"].reshape(-1).astype(jnp.float32) + dd.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logit)).reshape(B, S, H, N)            # (0,1)
+    u = p["bonus"].astype(jnp.float32)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+    # module-level CHUNK is a tuning knob (EXPERIMENTS.md §Perf rwkv cell):
+    # the within-chunk pairwise-decay tensor is O(C^2 N) per chunk, total
+    # HBM traffic O(S*C*N) — smaller chunks trade matmul efficiency for
+    # bandwidth on the non-fused path (the Pallas kernel keeps it in VMEM)
+    use_chunked = chunked if chunked is not None else (S % CHUNK == 0 and S >= 2 * CHUNK)
+    if use_chunked:
+        y, state = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), w, u, state0,
+                               chunk=CHUNK)
+    else:
+        y, state = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), w, u, state0)
+    y = y.reshape(B, S, H * N)
+    # per-head group norm
+    yh = y.reshape(B, S, H, N).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, H * N) * p["ln_g"] + p["ln_b"]
+    y = y.astype(dt) * g
+    return y @ p["wo"].astype(dt), (state, x[:, -1])
+
+
+def cmix_forward(p, x, x_prev=None):
+    dt = x.dtype
+    xp = _token_shift(x, x_prev)
+    sx = xp - x
+    xk = x + sx * p["mu_k"].astype(dt)
+    xr = x + sx * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    kv = k @ p["wv"].astype(dt)
+    return jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * kv, x[:, -1]

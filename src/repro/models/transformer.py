@@ -1,0 +1,310 @@
+"""Unified decoder stack for all LM-family architectures.
+
+The layer stack is organized into *pattern groups* (DESIGN.md §5): the
+config's ``pattern`` (e.g. gemma3 ``(local x5, global)``, recurrentgemma
+``(rec, rec, local)``) is scanned with ``lax.scan`` so XLA compiles one
+body per group regardless of depth; the ``n_layers % len(pattern)``
+remainder layers form an unscanned tail.  Each block kind owns its param
+and cache structure; caches carry explicit slot-position vectors.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import (
+    IDENTITY_SHARDER,
+    Sharder,
+    dense_init,
+    embed_init,
+    rms_norm,
+    split,
+)
+
+ATTN_KINDS = ("attn", "local", "global")
+
+
+# ---------------------------------------------------------------------------
+# Per-block params
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg, kind: str) -> Dict:
+    d = cfg.d_model
+    ks = split(key, 3)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,))}
+    if kind in ATTN_KINDS:
+        p["attn"] = attn.init_attn_params(ks[0], cfg)
+    elif kind == "rec":
+        p["rec"] = rglru_mod.init_rglru_params(
+            ks[0], d, cfg.lru_width or d, cfg.conv_width)
+    elif kind == "rwkv":
+        p["tmix"] = rwkv_mod.init_tmix_params(
+            ks[0], d, cfg.n_heads, cfg.rwkv_head_dim)
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv":
+        p["cmix"] = rwkv_mod.init_cmix_params(ks[1], d, cfg.d_ff)
+    elif cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe_params(ks[1], d, cfg.moe, cfg.ffn_type)
+    else:
+        p["mlp"] = ffn_mod.init_ffn_params(ks[1], d, cfg.d_ff, cfg.ffn_type)
+    return p
+
+
+def init_params(cfg, key) -> Dict:
+    kinds = cfg.layer_kinds()
+    P = len(cfg.pattern)
+    n_groups = cfg.n_layers // P
+    keys = split(key, cfg.n_layers + 3)
+    per_layer = [_init_block(keys[i], cfg, kinds[i]) for i in range(cfg.n_layers)]
+    groups = tuple(
+        jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[per_layer[g * P + pos] for g in range(n_groups)])
+        for pos in range(P)
+    ) if n_groups else tuple()
+    tail = tuple(per_layer[n_groups * P:])
+    params = {
+        "embed": {"w": embed_init(keys[-1], cfg.vocab_size, cfg.d_model)},
+        "stack": {"groups": groups, "tail": tail},
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(keys[-2], cfg.d_model, cfg.vocab_size)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block forwards (training / prefill)
+# ---------------------------------------------------------------------------
+
+def cast_block_params(bp, cfg):
+    """Pre-cast a block's fp32 master params to the compute dtype once, so
+    FSDP all-gathers move bf16 (half the wire bytes) instead of fp32
+    (perf iteration 3, EXPERIMENTS.md §Perf).  No-op when compute dtype is
+    fp32 (smoke tests)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if dt == jnp.float32:
+        return bp
+    return jax.tree.map(
+        lambda l: l.astype(dt) if l.dtype == jnp.float32 else l, bp)
+
+
+def block_forward(bp, cfg, kind, x, *, positions=None, mask_fn=None,
+                  shard: Sharder = IDENTITY_SHARDER,
+                  collect_cache: bool = False, cache_len: int = 0):
+    """Returns (x, aux, cache_entry_or_None)."""
+    bp = cast_block_params(bp, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    cache_entry = None
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        y = attn.attn_forward(
+            bp["attn"], cfg, h, kind=kind, mask_fn=mask_fn,
+            q_positions=positions, kv_positions=positions, shard=shard)
+        if collect_cache:
+            cache_entry = _prefill_attn_cache(bp["attn"], cfg, h, kind,
+                                              positions, cache_len)
+    elif kind == "rec":
+        y, state = rglru_mod.rglru_forward(bp["rec"], cfg, h)
+        if collect_cache:
+            cache_entry = state
+    elif kind == "rwkv":
+        y, (S, last_x) = rwkv_mod.tmix_forward(bp["tmix"], cfg, h)
+        if collect_cache:
+            cache_entry = {"S": S, "x_tmix": last_x}
+    x = x + y
+    h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if kind == "rwkv":
+        y2, last_x2 = rwkv_mod.cmix_forward(bp["cmix"], h2)
+        if collect_cache:
+            cache_entry["x_cmix"] = last_x2
+    elif "moe" in bp:
+        y2, aux = moe_mod.moe_forward(bp["moe"], cfg, h2, shard=shard)
+    else:
+        y2 = ffn_mod.ffn_forward(bp["mlp"], h2, cfg.ffn_type, shard=shard)
+    x = shard(x + y2, "act_bsd")
+    return x, aux, cache_entry
+
+
+def _prefill_attn_cache(ap, cfg, h, kind, positions, cache_len):
+    """Recompute K/V for the cache after prefill (cheap vs attention)."""
+    B, S, _ = h.shape
+    pos = (jnp.broadcast_to(jnp.arange(S), (B, S))
+           if positions is None else positions)
+    _, k, v = attn._project_qkv(ap, cfg, h, h, pos, pos, kind != "cross")
+    window = kind == "local"
+    cache = attn.init_kv_cache(cfg, B, cache_len, window,
+                               dtype=jnp.dtype(cfg.compute_dtype))
+    return attn.cache_prefill(cache, k, v, pos)
+
+
+# ---------------------------------------------------------------------------
+# Block decode (one token)
+# ---------------------------------------------------------------------------
+
+def block_decode(bp, cfg, kind, x_t, cache_entry, *,
+                 shard: Sharder = IDENTITY_SHARDER, mask_fn=None):
+    bp = cast_block_params(bp, cfg)
+    h = rms_norm(x_t, bp["ln1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        y, cache_entry = attn.attn_decode(
+            bp["attn"], cfg, h, cache_entry, kind=kind, mask_fn=mask_fn,
+            shard=shard)
+    elif kind == "rec":
+        y, cache_entry = rglru_mod.rglru_forward(bp["rec"], cfg, h,
+                                                 state=cache_entry)
+    elif kind == "rwkv":
+        y, (S, last_x) = rwkv_mod.tmix_forward(
+            bp["tmix"], cfg, h, state0=cache_entry["S"],
+            x_prev=cache_entry["x_tmix"], chunked=False)
+        cache_entry = dict(cache_entry, S=S.astype(cache_entry["S"].dtype),
+                           x_tmix=last_x.astype(
+                               cache_entry["x_tmix"].dtype))
+    x_t = x_t + y
+    h2 = rms_norm(x_t, bp["ln2"], cfg.norm_eps)
+    if kind == "rwkv":
+        y2, last_x2 = rwkv_mod.cmix_forward(bp["cmix"], h2,
+                                            x_prev=cache_entry["x_cmix"])
+        cache_entry = dict(cache_entry,
+                           x_cmix=last_x2.astype(
+                               cache_entry["x_cmix"].dtype))
+    elif "moe" in bp:
+        y2, _ = moe_mod.moe_forward(bp["moe"], cfg, h2, shard=shard,
+                                    decode=True)
+    else:
+        y2 = ffn_mod.ffn_forward(bp["mlp"], h2, cfg.ffn_type, shard=shard)
+    return x_t + y2, cache_entry
+
+
+# ---------------------------------------------------------------------------
+# Full stack
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg, tokens):
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(params, cfg, x):
+    w = (params["embed"]["w"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])
+    return x @ w.astype(x.dtype)
+
+
+def forward_hidden(params, cfg, x, *, positions=None, mask_fn=None,
+                   shard: Sharder = IDENTITY_SHARDER, remat: bool = True,
+                   collect_cache: bool = False, cache_len: int = 0):
+    """Runs the stack on embedded input ``x`` -> (final hidden, aux,
+    cache_or_None).  ``mask_fn`` overrides attention masking (prefix-LM)."""
+    pattern = cfg.pattern
+    n_groups = cfg.n_layers // len(pattern)
+
+    def group_body(carry, gp):
+        xx = carry
+        auxes = []
+        caches = []
+        for pos, kind in enumerate(pattern):
+            bp = gp[pos]
+            xx, aux, ce = block_forward(
+                bp, cfg, kind, xx, positions=positions, mask_fn=mask_fn,
+                shard=shard, collect_cache=collect_cache, cache_len=cache_len)
+            auxes.append(aux)
+            caches.append(ce)
+        return xx, (jnp.stack(auxes).sum(), tuple(caches))
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    aux_total = jnp.zeros((), jnp.float32)
+    group_caches = None
+    if n_groups:
+        x, (aux_g, group_caches) = jax.lax.scan(
+            body, x, params["stack"]["groups"])
+        aux_total = aux_total + aux_g.sum()
+    tail_caches = []
+    kinds = cfg.layer_kinds()
+    for i, bp in enumerate(params["stack"]["tail"]):
+        kind = kinds[n_groups * len(pattern) + i]
+        x, aux, ce = block_forward(
+            bp, cfg, kind, x, positions=positions, mask_fn=mask_fn,
+            shard=shard, collect_cache=collect_cache, cache_len=cache_len)
+        aux_total = aux_total + aux
+        tail_caches.append(ce)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    cache = ({"groups": group_caches, "tail": tuple(tail_caches)}
+             if collect_cache else None)
+    return x, aux_total, cache
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    """Zero-initialized decode cache matching forward_hidden's structure."""
+    dtype = jnp.dtype(cfg.compute_dtype) if dtype is None else dtype
+    pattern = cfg.pattern
+    n_groups = cfg.n_layers // len(pattern)
+    kinds = cfg.layer_kinds()
+
+    def one(kind):
+        if kind in ATTN_KINDS:
+            return attn.init_kv_cache(cfg, batch, cache_len,
+                                      window=(kind == "local"), dtype=dtype)
+        if kind == "rec":
+            return rglru_mod.init_rglru_state(batch, cfg.lru_width or cfg.d_model,
+                                              cfg.conv_width)
+        if kind == "rwkv":
+            return {
+                "S": jnp.zeros((batch, cfg.n_heads, cfg.rwkv_head_dim,
+                                cfg.rwkv_head_dim), jnp.float32),
+                "x_tmix": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                "x_cmix": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            }
+        raise ValueError(kind)
+
+    groups = tuple(
+        jax.tree.map(lambda l: jnp.broadcast_to(l, (n_groups,) + l.shape)
+                     .copy(), one(kind))
+        for kind in pattern
+    ) if n_groups else tuple()
+    tail = tuple(one(kinds[n_groups * len(pattern) + i])
+                 for i in range(cfg.n_layers - n_groups * len(pattern)))
+    return {"groups": groups, "tail": tail}
+
+
+def decode_step(params, cfg, x_t, cache, *, shard: Sharder = IDENTITY_SHARDER,
+                mask_fn=None):
+    """x_t: (B,1,d) embedded token.  Returns (hidden (B,1,d), new cache)."""
+    pattern = cfg.pattern
+    n_groups = cfg.n_layers // len(pattern)
+    kinds = cfg.layer_kinds()
+
+    def group_body(carry, xs):
+        xx = carry
+        gp, gc = xs
+        new_caches = []
+        for pos, kind in enumerate(pattern):
+            xx, ce = block_decode(gp[pos], cfg, kind, xx, gc[pos],
+                                  shard=shard, mask_fn=mask_fn)
+            new_caches.append(ce)
+        return xx, tuple(new_caches)
+
+    new_group_caches = cache["groups"]
+    x = x_t
+    if n_groups:
+        x, new_group_caches = jax.lax.scan(
+            group_body, x, (params["stack"]["groups"], cache["groups"]))
+    new_tail = []
+    for i, bp in enumerate(params["stack"]["tail"]):
+        kind = kinds[n_groups * len(pattern) + i]
+        x, ce = block_decode(bp, cfg, kind, x, cache["tail"][i],
+                             shard=shard, mask_fn=mask_fn)
+        new_tail.append(ce)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, {"groups": new_group_caches, "tail": tuple(new_tail)}

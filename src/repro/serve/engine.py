@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + decode loops over a ModelBundle,
+greedy or temperature sampling, simple continuous-batching simulation
+(requests of different lengths padded into one prefill, decoded until
+eos/budget)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_s: float
+    decode_s: float
+    tokens_out: int
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / max(self.decode_s, 1e-9)
+
+
+def sample_token(logits, key, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def generate(
+    bundle,
+    params,
+    prompts: jnp.ndarray,           # (B, S_prompt) int32
+    max_new_tokens: int,
+    *,
+    temperature: float = 0.0,
+    eos_id: Optional[int] = None,
+    key=None,
+    extra_inputs: Optional[Dict] = None,
+):
+    """Greedy/temperature batched generation.  Returns (tokens (B, T_new),
+    stats)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    B, Sp = prompts.shape
+    batch = dict(extra_inputs or {}, tokens=prompts)
+
+    t0 = time.time()
+    logits, cache = jax.jit(
+        lambda p, b: bundle.prefill(p, b, cache_len=Sp + max_new_tokens)
+    )(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(bundle.decode)
+    out = []
+    tok = sample_token(logits, key, temperature)
+    out.append(tok)
+    done = jnp.zeros((B,), bool) if eos_id is not None else None
+    t0 = time.time()
+    for i in range(max_new_tokens - 1):
+        key = jax.random.fold_in(key, i)
+        logits, cache = decode(params, cache, tok)
+        tok = sample_token(logits, key, temperature)
+        if eos_id is not None:
+            done = done | (tok == eos_id)
+            tok = jnp.where(done, eos_id, tok)
+        out.append(tok)
+        if eos_id is not None and bool(done.all()):
+            break
+    jax.block_until_ready(out[-1])
+    t_decode = time.time() - t0
+    tokens = jnp.stack(out, axis=1)
+    return tokens, ServeStats(t_prefill, t_decode, int(tokens.size))

@@ -1,0 +1,71 @@
+"""Cross-pod gradient compression (beyond-paper distributed optimization).
+
+Over the slow DCN ``pod`` axis, all-reducing full fp32 gradients is the
+dominant collective.  Two composable compressors:
+
+  * bf16 cast (2x):   lossless enough for gradient averaging in practice;
+  * top-k sparsification with **error feedback** (Stich et al. 2018):
+    transmit the k largest-|g| entries per tensor, accumulate the residual
+    locally and add it to the next step's gradient — provably convergent
+    for SGD.
+
+``compressed_psum`` wires a compressor into an explicit shard_map
+all-reduce over a named axis (the pattern a multi-pod deployment uses for
+the ``pod`` axis while leaving intra-pod reductions dense).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_compress(g):
+    return jax.tree.map(lambda l: l.astype(jnp.bfloat16), g)
+
+
+def topk_compress(g, err, k_frac: float = 0.05):
+    """Returns (sparse_g, new_err).  sparse_g has the same dense shape
+    (zeros off-support) — the collective still benefits when the runtime
+    all-reduces bf16-sparse or when k_frac maps to gather-scatter; the
+    error-feedback math is exact either way."""
+
+    def one(l, e):
+        l32 = l.astype(jnp.float32) + e
+        flat = l32.reshape(-1)
+        k = max(int(flat.size * k_frac), 1)
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(flat) >= thresh
+        sent = jnp.where(mask, flat, 0.0)
+        return sent.reshape(l.shape), (flat - sent).reshape(l.shape)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(g)
+    flat_e = jax.tree_util.tree_leaves(err)
+    out = [one(l, e) for l, e in zip(flat_g, flat_e)]
+    sent = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_err = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return sent, new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(grads, axis: str, mode: str = "bf16", err=None,
+                    k_frac: float = 0.05):
+    """All-reduce-mean grads over ``axis`` (inside shard_map) with the
+    selected compressor.  Returns (mean grads fp32, new error state)."""
+    if mode == "none":
+        return jax.tree.map(
+            lambda l: jax.lax.pmean(l.astype(jnp.float32), axis), grads), err
+    if mode == "bf16":
+        sent = bf16_compress(grads)
+        red = jax.tree.map(
+            lambda l: jax.lax.pmean(l.astype(jnp.float32), axis), sent)
+        return red, err
+    if mode == "topk":
+        sent, new_err = topk_compress(grads, err, k_frac)
+        red = jax.tree.map(lambda l: jax.lax.pmean(l, axis), sent)
+        return red, new_err
+    raise ValueError(mode)

@@ -1,0 +1,217 @@
+"""End-to-end training loop implementing paper Algorithm 1 around any
+ModelBundle: warm-start on full data, re-selection every R epochs
+(PGM or a baseline), weighted mini-batch SGD on the subset, newbob lr
+annealing on validation loss, checkpoint/resume, and cost accounting
+(the basis of the paper's speedup numbers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core import baselines as bl
+from repro.core.lastlayer import make_proj_for, units_gradients
+from repro.core.metrics import overlap_index
+from repro.core.pgm import Selection, pgm_select
+from repro.data.pipeline import (
+    full_iterator,
+    subset_iterator,
+    unit_durations,
+)
+from repro.train import checkpoint as ckpt_mod
+from repro.train.optim import NewbobState, clip_by_global_norm, make_optimizer
+
+
+@dataclasses.dataclass
+class History:
+    train_loss: List[float] = dataclasses.field(default_factory=list)
+    val_loss: List[float] = dataclasses.field(default_factory=list)
+    lr: List[float] = dataclasses.field(default_factory=list)
+    selections: List[Dict] = dataclasses.field(default_factory=list)
+    cost_units: float = 0.0        # full-epoch-equivalent compute units
+    wall_time: float = 0.0
+    final_params: Any = None
+
+
+def make_train_step(bundle, cfg: TrainConfig):
+    _, opt_update = make_optimizer(cfg.optimizer)
+
+    @jax.jit
+    def step(params, opt_state, batch, lr):
+        def loss(p):
+            total, metrics = bundle.loss_fn(p, batch)
+            return total, metrics
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        params, opt_state = opt_update(
+            params, grads, opt_state, lr,
+            **({"momentum": cfg.momentum} if cfg.optimizer == "sgd" else {}),
+            weight_decay=cfg.weight_decay)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval(bundle):
+    @jax.jit
+    def ev(params, batch):
+        return bundle.per_example_loss(params, batch).mean()
+    return ev
+
+
+def _select(method, bundle, params, units, tc: TrainConfig, key, proj,
+            val_units, durations):
+    pc = tc.pgm
+    n_units = jax.tree.leaves(units)[0].shape[0]
+    budget = max(int(pc.subset_fraction * n_units), 1)
+    if method == "pgm":
+        return pgm_select(bundle, params, units, pc, proj,
+                          val_units=val_units)
+    if method == "random":
+        return bl.random_subset(key, n_units, budget)
+    if method == "large_only":
+        return bl.large_only(jnp.asarray(durations), budget)
+    if method == "large_small":
+        return bl.large_small(jnp.asarray(durations), budget)
+    if method == "gradmatch_pb":
+        g = units_gradients(bundle, params, units, proj,
+                            exact=not pc.use_sketch)
+        g_val = None
+        if pc.val_matching:
+            gv = units_gradients(bundle, params, val_units, proj,
+                                 exact=not pc.use_sketch)
+            g_val = gv.mean(axis=0) * float(n_units)
+        return bl.gradmatch_pb(g, budget, pc.lam, pc.eps, pc.nonneg_weights,
+                               g_val=g_val)
+    raise ValueError(method)
+
+
+def train_with_selection(
+    bundle,
+    units: Dict[str, np.ndarray],
+    tc: TrainConfig,
+    *,
+    method: str = "pgm",            # pgm|random|large_only|large_small|
+                                    # gradmatch_pb|full
+    val_units=None,
+    key=None,
+    batch_units: int = 1,
+    ckpt_dir: Optional[str] = None,
+    resume: bool = False,
+    log_fn: Callable[[str], None] = lambda s: None,
+) -> History:
+    key = jax.random.PRNGKey(tc.seed) if key is None else key
+    params = bundle.init_params(key)
+    opt_init, _ = make_optimizer(tc.optimizer)
+    opt_state = opt_init(params) if tc.optimizer != "sgd" \
+        else opt_init(params, tc.momentum)
+    step_fn = make_train_step(bundle, tc)
+    eval_fn = make_eval(bundle)
+    units_dev = {k: jnp.asarray(v) for k, v in units.items()}
+    val_dev = (None if val_units is None
+               else {k: jnp.asarray(v) for k, v in val_units.items()})
+    durations = unit_durations(units)
+    proj = make_proj_for(bundle, jax.random.fold_in(key, 17),
+                         tc.pgm.sketch_dim_h, tc.pgm.sketch_dim_v)
+
+    hist = History()
+    newbob = NewbobState(tc.lr)
+    selection: Optional[Selection] = None
+    start_epoch = 0
+    if resume and ckpt_dir and ckpt_mod.latest_step(ckpt_dir) is not None:
+        tmpl = {"params": params, "opt": opt_state}
+        loaded, manifest = ckpt_mod.restore(ckpt_dir, template=tmpl)
+        params, opt_state = loaded["params"], loaded["opt"]
+        start_epoch = manifest["extra"]["epoch"] + 1
+        newbob = NewbobState(manifest["extra"]["lr"],
+                             manifest["extra"]["prev_loss"])
+        if manifest["extra"].get("sel_indices") is not None:
+            selection = Selection(
+                jnp.asarray(manifest["extra"]["sel_indices"], jnp.int32),
+                jnp.asarray(manifest["extra"]["sel_weights"], jnp.float32),
+                jnp.asarray(len(manifest["extra"]["sel_indices"])),
+                jnp.zeros((1,)))
+        log_fn(f"resumed at epoch {start_epoch}")
+
+    t0 = time.time()
+    n_units = jax.tree.leaves(units_dev)[0].shape[0]
+    for epoch in range(start_epoch, tc.epochs):
+        use_full = method == "full" or epoch < tc.pgm.warm_start_epochs
+        # --- selection round ---
+        if not use_full and (
+                selection is None
+                or (epoch - tc.pgm.warm_start_epochs) % tc.pgm.select_every == 0):
+            sel_key = jax.random.fold_in(key, 1000 + epoch)
+            new_sel = _select(method, bundle, params, units_dev, tc, sel_key,
+                              proj, val_dev, durations)
+            oi = (overlap_index(np.asarray(selection.indices),
+                                np.asarray(new_sel.indices))
+                  if selection is not None else float("nan"))
+            selection = new_sel
+            # selection cost: one grad-rep pass over all units ~ 1/3 epoch
+            sel_cost = (1.0 / 3.0 if method in ("pgm", "gradmatch_pb")
+                        else 0.0)
+            hist.cost_units += sel_cost
+            hist.selections.append({
+                "epoch": epoch,
+                "indices": np.asarray(selection.indices).tolist(),
+                "weights": np.asarray(selection.weights).tolist(),
+                "overlap_index": oi,
+            })
+            log_fn(f"epoch {epoch}: selected {int(selection.n_selected)} "
+                   f"units (OI={oi:.3f})")
+
+        # --- epoch of SGD ---
+        if use_full:
+            it = full_iterator(units, tc.seed, epoch, batch_units)
+            hist.cost_units += 1.0
+        else:
+            it = subset_iterator(units, np.asarray(selection.indices),
+                                 np.asarray(selection.weights),
+                                 tc.seed, epoch, batch_units)
+            hist.cost_units += float(int(selection.n_selected)) / n_units
+        losses = []
+        for batch in it:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                 newbob.lr)
+            losses.append(float(metrics["loss"]))
+        train_loss = float(np.mean(losses)) if losses else float("nan")
+
+        # --- validation + newbob ---
+        if val_dev is not None:
+            vl = float(np.mean([
+                float(eval_fn(params,
+                              {k: v[i] for k, v in val_dev.items()}))
+                for i in range(jax.tree.leaves(val_dev)[0].shape[0])]))
+            newbob = newbob.update(vl, tc.anneal_factor,
+                                   tc.improvement_threshold)
+        else:
+            vl = float("nan")
+        hist.train_loss.append(train_loss)
+        hist.val_loss.append(vl)
+        hist.lr.append(newbob.lr)
+        log_fn(f"epoch {epoch}: train {train_loss:.4f} val {vl:.4f} "
+               f"lr {newbob.lr:.4f}")
+
+        if ckpt_dir:
+            extra = {"epoch": epoch, "lr": newbob.lr,
+                     "prev_loss": newbob.prev_loss,
+                     "sel_indices": (np.asarray(selection.indices).tolist()
+                                     if selection is not None else None),
+                     "sel_weights": (np.asarray(selection.weights).tolist()
+                                     if selection is not None else None)}
+            ckpt_mod.save(ckpt_dir, epoch,
+                          {"params": params, "opt": opt_state}, extra)
+
+    hist.wall_time = time.time() - t0
+    hist.final_params = params
+    return hist

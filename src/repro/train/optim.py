@@ -1,0 +1,111 @@
+"""Optimizers (from scratch — no optax offline): SGD(+momentum), AdamW,
+gradient clipping, and the paper's "newbob" scheduler (anneal lr by a
+factor when relative validation improvement drops below a threshold).
+Optimizer states are pytrees mirroring the params, so they inherit the
+params' sharding (ZeRO-3-style under FSDP specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), n
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum) — the paper trains with plain SGD at lr 1-2
+# ---------------------------------------------------------------------------
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {"step": jnp.zeros((), jnp.int32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(params, grads, state, lr, momentum: float = 0.0,
+               weight_decay: float = 0.0):
+    step = state["step"] + 1
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    if momentum:
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        upd = mu
+        new_state = {"step": step, "mu": mu}
+    else:
+        upd = grads
+        new_state = {"step": step}
+    params = jax.tree.map(lambda p, u: (p - lr * u).astype(p.dtype),
+                          params, upd)
+    return params, new_state
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay: float = 0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_
+                     + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                     state["v"], grads)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    params = jax.tree.map(upd, params, m, v)
+    return params, {"step": step, "m": m, "v": v}
+
+
+def make_optimizer(name: str):
+    if name == "sgd":
+        return sgd_init, sgd_update
+    if name == "adamw":
+        return adamw_init, adamw_update
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# newbob scheduler (paper: lr 2.0, anneal 0.8 on rel. improvement < 0.0025)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class NewbobState:
+    lr: float
+    prev_loss: float = float("inf")
+
+    def update(self, val_loss: float, anneal_factor: float = 0.8,
+               improvement_threshold: float = 0.0025) -> "NewbobState":
+        if self.prev_loss != float("inf"):
+            rel = (self.prev_loss - val_loss) / max(abs(self.prev_loss), 1e-9)
+            if rel < improvement_threshold:
+                return NewbobState(self.lr * anneal_factor, val_loss)
+        return NewbobState(self.lr, val_loss)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# smoke tests and benches must see the single real CPU device; ONLY the
+# dry-run (its own subprocess) forces 512 host devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

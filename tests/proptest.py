@@ -1,0 +1,35 @@
+"""Minimal property-based testing helper (hypothesis is not installed in
+this offline environment — recorded in DESIGN.md §2).
+
+``sweep(cases)(fn)`` runs fn over explicit + seeded-random cases;
+``rand_cases`` generates shape/seed tuples deterministically so failures
+reproduce exactly by seed."""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Callable, Iterable, List, Sequence
+
+import numpy as np
+import pytest
+
+
+def rand_cases(n_cases: int, rng_seed: int, /, **dims: Sequence):
+    """Deterministic random combinations of the given dimension choices."""
+    rng = np.random.default_rng(rng_seed)
+    keys = list(dims)
+    out = []
+    for i in range(n_cases):
+        out.append(tuple(dims[k][rng.integers(len(dims[k]))] for k in keys))
+    return out
+
+
+def sweep(cases: Iterable):
+    cases = [c if isinstance(c, tuple) else (c,) for c in cases]
+    ids = ["-".join(str(x) for x in c) for c in cases]
+
+    def deco(fn: Callable):
+        return pytest.mark.parametrize(
+            "case", cases, ids=ids)(lambda case: fn(*case))
+
+    return deco

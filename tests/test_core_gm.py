@@ -1,0 +1,80 @@
+"""Properties of Gradient Matching (Algorithm 2) and the OMP solver."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import rand_cases
+from repro.core.gm import gm_select, gram, gram_omp
+
+
+@pytest.mark.parametrize("seed,n,D", rand_cases(6, 0, seed=range(100),
+                                                n=[16, 32, 64],
+                                                D=[32, 64, 128]))
+def test_omp_recovers_planted_sparse_combination(seed, n, D):
+    rng = np.random.default_rng(seed)
+    G = jnp.asarray(rng.normal(size=(n, D)), jnp.float32)
+    idx = rng.choice(n, 3, replace=False)
+    w = np.zeros(n, np.float32)
+    w[idx] = [2.0, 1.5, 1.0]
+    g_t = jnp.asarray(w) @ G
+    res = gm_select(G, g_t, budget=5, lam=1e-4)
+    got = {int(i) for i in res.indices if i >= 0}
+    assert set(int(i) for i in idx) <= got
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_omp_error_monotone_in_budget(seed):
+    rng = np.random.default_rng(seed)
+    G = jnp.asarray(rng.normal(size=(40, 64)), jnp.float32)
+    g_t = jnp.asarray(rng.normal(size=(64,)), jnp.float32) * 3
+    errs = [float(gm_select(G, g_t, budget=b, lam=1e-3).error)
+            for b in (1, 2, 4, 8, 16)]
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a + 1e-4, errs
+
+
+def test_omp_no_duplicate_selection():
+    rng = np.random.default_rng(3)
+    G = jnp.asarray(rng.normal(size=(12, 32)), jnp.float32)
+    g_t = G.sum(axis=0)
+    res = gm_select(G, g_t, budget=12, lam=1e-3)
+    sel = [int(i) for i in res.indices if i >= 0]
+    assert len(sel) == len(set(sel)), sel
+
+
+def test_omp_respects_budget_and_padding():
+    rng = np.random.default_rng(4)
+    G = jnp.asarray(rng.normal(size=(20, 16)), jnp.float32)
+    res = gm_select(G, G[3] * 2.0, budget=4, lam=1e-6)
+    assert int(res.n_selected) <= 4
+    # padded slots carry -1 / weight 0
+    for i, w in zip(res.indices, res.weights):
+        if int(i) < 0:
+            assert float(w) == 0.0
+
+
+def test_omp_nonneg_weights():
+    rng = np.random.default_rng(5)
+    G = jnp.asarray(rng.normal(size=(30, 48)), jnp.float32)
+    g_t = jnp.abs(jnp.asarray(rng.normal(size=(48,))))
+    res = gm_select(G, g_t, budget=10, lam=1e-3, nonneg=True)
+    assert float(res.weights.min()) >= 0.0
+
+
+def test_omp_eps_early_stop():
+    """If one atom matches the target exactly, OMP stops after one pick."""
+    rng = np.random.default_rng(6)
+    G = jnp.asarray(rng.normal(size=(10, 32)), jnp.float32)
+    res = gm_select(G, G[7], budget=8, lam=1e-8, eps=1e-3)
+    assert int(res.n_selected) <= 2
+    assert 7 in [int(i) for i in res.indices if i >= 0]
+
+
+def test_gram_matches_kernel_oracle():
+    from repro.kernels.omp_gram.ops import omp_gram_op
+    rng = np.random.default_rng(7)
+    g = jnp.asarray(rng.normal(size=(33, 70)), jnp.float32)
+    a = gram(g)
+    b = omp_gram_op(g, use_pallas=True, interpret=True)
+    assert jnp.allclose(a, b, atol=1e-3)

@@ -1,0 +1,120 @@
+"""PGM (Algorithm 1) properties: partition locality, budget, the
+Appendix-A upper bound vs GRAD-MATCHPB, sketched-vs-exact selection
+agreement, validation matching, and the shard_map distribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import PGMConfig
+from repro.core import gm
+from repro.core.baselines import gradmatch_pb, large_only, large_small, random_subset
+from repro.core.lastlayer import make_proj_for
+from repro.core.pgm import gather_selected, partitioned_gm, pgm_select
+from repro.models.api import build_model
+
+
+def _rand_units(n=40, D=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, D)), jnp.float32)
+
+
+def test_partition_locality_and_budget():
+    G = _rand_units()
+    sel = partitioned_gm(G, 4, 3, lam=1e-3)
+    idx = [int(i) for i in sel.indices]
+    assert len(idx) == 12
+    for p in range(4):
+        part = [i for i in idx[p * 3:(p + 1) * 3] if i >= 0]
+        assert len(part) == len(set(part))
+        for i in part:
+            assert p * 10 <= i < (p + 1) * 10
+
+
+def test_appendix_a_bound():
+    """Paper Appendix A: for the same weighted selection, the sum of
+    per-partition objectives upper-bounds the unpartitioned objective
+    (triangle inequality)."""
+    G = _rand_units(n=32, D=48, seed=1)
+    D_parts = 4
+    per = 32 // D_parts
+    sel = partitioned_gm(G, D_parts, 4, lam=0.1)
+    w_full = np.zeros(32, np.float32)
+    for i, w in zip(np.asarray(sel.indices), np.asarray(sel.weights)):
+        if i >= 0:
+            w_full[i] = w
+    lam = 0.1
+    # per-partition objectives (as PGM computes them)
+    part_err = 0.0
+    for p in range(D_parts):
+        gp = np.asarray(G[p * per:(p + 1) * per])
+        wp = w_full[p * per:(p + 1) * per]
+        r = wp @ gp - gp.sum(0)
+        part_err += lam * (wp ** 2).sum() + (r ** 2).sum() ** 0.5
+    # unpartitioned objective with the same weights
+    r_full = w_full @ np.asarray(G) - np.asarray(G).sum(0)
+    full_err = lam * (w_full ** 2).sum() + (r_full ** 2).sum() ** 0.5
+    assert part_err >= full_err - 1e-4
+
+
+def test_sketched_selection_agrees_with_exact():
+    cfg = get_config("minitron-8b-smoke")
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init_params(key)
+    units = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[m.make_batch(jax.random.PRNGKey(i), 2, 16) for i in range(16)])
+    proj = make_proj_for(m, key, 48, 48)
+    pc_s = PGMConfig(subset_fraction=0.5, n_partitions=4, use_sketch=True)
+    pc_e = PGMConfig(subset_fraction=0.5, n_partitions=4, use_sketch=False)
+    sel_s = pgm_select(m, params, units, pc_s, proj)
+    sel_e = pgm_select(m, params, units, pc_e)
+    a = {int(i) for i in sel_s.indices if i >= 0}
+    b = {int(i) for i in sel_e.indices if i >= 0}
+    assert len(a & b) >= int(0.6 * len(b)), (a, b)
+
+
+def test_val_matching_runs_and_differs():
+    cfg = get_config("minitron-8b-smoke")
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = m.init_params(key)
+    units = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[m.make_batch(jax.random.PRNGKey(i), 2, 16) for i in range(8)])
+    vunits = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[m.make_batch(jax.random.PRNGKey(100 + i), 2, 16) for i in range(4)])
+    proj = make_proj_for(m, key, 32, 32)
+    pc = PGMConfig(subset_fraction=0.5, n_partitions=2, use_sketch=True,
+                   val_matching=True)
+    sel = pgm_select(m, params, units, pc, proj, val_units=vunits)
+    assert int(sel.n_selected) >= 2
+
+
+def test_baselines():
+    key = jax.random.PRNGKey(0)
+    sel = random_subset(key, 20, 5)
+    assert len({int(i) for i in sel.indices}) == 5
+    dur = jnp.asarray(np.arange(20, dtype=np.float32))
+    lo = large_only(dur, 4)
+    assert sorted(int(i) for i in lo.indices) == [16, 17, 18, 19]
+    ls = large_small(dur, 4)
+    assert sorted(int(i) for i in ls.indices) == [0, 1, 18, 19]
+    G = _rand_units(20, 32, 2)
+    gp = gradmatch_pb(G, 6, lam=1e-3)
+    assert int(gp.n_selected) <= 6
+
+
+def test_gather_selected_applies_weights():
+    units = {"tokens": jnp.arange(40).reshape(10, 4),
+             "weights": jnp.ones((10, 4))}
+    from repro.core.pgm import Selection
+    sel = Selection(jnp.asarray([2, 5, -1]), jnp.asarray([2.0, 0.5, 0.0]),
+                    jnp.asarray(2), jnp.zeros(1))
+    sub = gather_selected(units, sel)
+    assert sub["tokens"].shape == (3, 4)
+    assert float(sub["weights"][0, 0]) == 2.0
+    assert float(sub["weights"][2, 0]) == 0.0  # padded slot zeroed

@@ -1,0 +1,112 @@
+"""The multiplicity-corrected HLO analyzer vs hand-computed programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_hlo
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_plain_matmul_flops_exact():
+    m, n, k = 64, 96, 128
+    a = analyze(_hlo(lambda a, b: a @ b, jnp.zeros((m, k)), jnp.zeros((k, n))))
+    assert abs(a.flops - 2 * m * n * k) / (2 * m * n * k) < 0.01
+
+
+def test_scan_multiplicity():
+    T, M = 10, 32
+
+    def scanned(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    a = analyze(_hlo(scanned, jnp.zeros((M, M)), jnp.zeros((T, M, M))))
+    want = T * 2 * M ** 3
+    assert abs(a.flops - want) / want < 0.05
+
+
+def test_nested_scan_multiplicity():
+    T, M, O = 10, 32, 5
+
+    def nested(x, ws):
+        def outer(c, _):
+            return jax.lax.scan(lambda ci, w: (ci @ w, None), c, ws)[0], None
+        return jax.lax.scan(outer, x, None, length=O)[0]
+
+    a = analyze(_hlo(nested, jnp.zeros((M, M)), jnp.zeros((T, M, M))))
+    want = O * T * 2 * M ** 3
+    assert abs(a.flops - want) / want < 0.05
+
+
+def test_bytes_accounting_positive_and_scales():
+    M = 64
+    a1 = analyze(_hlo(lambda x: x + 1.0, jnp.zeros((M, M))))
+    a2 = analyze(_hlo(lambda x: x + 1.0, jnp.zeros((4 * M, 4 * M))))
+    assert a2.bytes > a1.bytes > 0
+
+
+def test_grad_of_scan_counts_backward_loops():
+    T, M = 8, 16
+
+    def f(x, ws):
+        y = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)[0]
+        return jnp.sum(y)
+
+    a = analyze(_hlo(jax.grad(f, argnums=1), jnp.ones((M, M)),
+                     jnp.ones((T, M, M))))
+    # fwd T matmuls + bwd 2T matmuls (dx and dw), allow fusion slack
+    want_min = 2.5 * T * 2 * M ** 3
+    assert a.flops >= want_min, a.flops
+
+
+def test_parse_handles_tuple_types_with_comments():
+    txt = """
+HloModule m
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %d = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c1 = s32[] constant(1)
+  %ip = s32[] add(%i, %c1)
+  ROOT %t = (s32[], f32[4,4]) tuple(%ip, %d)
+}
+
+%cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+  %x = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4,4]) tuple(%z, %x)
+  %w = (s32[], /*index=1*/f32[4,4]{1,0}) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    a = analyze(txt)
+    assert a.flops == 7 * 2 * 4 ** 3, a.flops
+
+
+def test_collective_wire_models():
+    txt = """
+HloModule m
+
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[1,8]<=[8], to_apply=%add
+  ROOT %ag = f32[1024]{0} all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+    a = analyze(txt)
+    ar = a.collectives["all-reduce"]
+    ag = a.collectives["all-gather"]
+    assert ar["count"] == 1 and ag["count"] == 1
+    assert abs(ar["wire_bytes"] - 2 * 4096 * 7 / 8) < 1
+    assert abs(ag["wire_bytes"] - 4096 * 3 / 4) < 1

@@ -1,0 +1,118 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
+oracle, per the deliverable-c requirement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import rand_cases
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# grad_sketch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "N,d,V,k1,k2,tn,tv,dtype",
+    [(40, 32, 300, 16, 16, 16, 128, jnp.float32),
+     (256, 64, 1000, 32, 32, 128, 256, jnp.float32),
+     (100, 48, 517, 8, 24, 32, 100, jnp.float32),
+     (64, 32, 301, 16, 16, 32, 64, jnp.bfloat16),
+     (17, 16, 64, 8, 8, 8, 32, jnp.float32)])
+def test_grad_sketch_matches_oracle(N, d, V, k1, k2, tn, tv, dtype):
+    from repro.kernels.grad_sketch.kernel import grad_sketch
+    from repro.kernels.grad_sketch.ref import grad_sketch_ref
+    h = _arr((N, d), dtype)
+    w = _arr((d, V), dtype, 0.1)
+    rh, rv = _arr((d, k1)), _arr((V, k2))
+    t = jnp.asarray(RNG.integers(0, V, N), jnp.int32)
+    s = jnp.asarray(RNG.uniform(0.5, 1.0, N), jnp.float32)
+    want = grad_sketch_ref(h, w, rh, rv, t, s)
+    got = grad_sketch(h, w, rh, rv, t, s, tn=tn, tv=tv, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    rel = float(jnp.abs(got - want).max() / (jnp.abs(want).max() + 1e-9))
+    assert rel < tol, rel
+
+
+def test_grad_sketch_op_jnp_path_matches():
+    from repro.kernels.grad_sketch.ops import grad_sketch_op
+    from repro.kernels.grad_sketch.ref import grad_sketch_ref
+    h, w = _arr((50, 24)), _arr((24, 400), scale=0.1)
+    rh, rv = _arr((24, 12)), _arr((400, 12))
+    t = jnp.asarray(RNG.integers(0, 400, 50), jnp.int32)
+    s = jnp.ones((50,), jnp.float32)
+    want = grad_sketch_ref(h, w, rh, rv, t, s)
+    got = grad_sketch_op(h, w, rh, rv, t, s, use_pallas=False, vocab_chunk=128)
+    assert jnp.allclose(got, want, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# omp_gram
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,D,ti,td,dtype",
+                         [(40, 100, 16, 64, jnp.float32),
+                          (130, 257, 64, 64, jnp.float32),
+                          (64, 128, 32, 128, jnp.bfloat16),
+                          (7, 9, 8, 8, jnp.float32)])
+def test_omp_gram_matches_oracle(n, D, ti, td, dtype):
+    from repro.kernels.omp_gram.kernel import omp_gram
+    from repro.kernels.omp_gram.ref import omp_gram_ref
+    g = _arr((n, D), dtype)
+    got = omp_gram(g, ti=ti, tj=ti, td=td, interpret=True)
+    want = omp_gram_ref(g)
+    tol = 1e-3 if dtype == jnp.float32 else 1e-1
+    assert jnp.allclose(got, want, atol=tol), float(jnp.abs(got - want).max())
+
+
+# ---------------------------------------------------------------------------
+# swa_attn
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,S,hd,W,tq,dtype",
+                         [(2, 3, 128, 32, 32, 16, jnp.float32),
+                          (1, 2, 256, 64, 64, 32, jnp.float32),
+                          (2, 2, 64, 16, 16, 16, jnp.float32),
+                          (1, 2, 128, 32, 64, 32, jnp.bfloat16),
+                          (1, 1, 96, 16, 32, 32, jnp.float32)])
+def test_swa_attn_matches_oracle(B, H, S, hd, W, tq, dtype):
+    from repro.kernels.swa_attn.kernel import swa_attn
+    from repro.kernels.swa_attn.ref import swa_attn_ref
+    q, k, v = (_arr((B, H, S, hd), dtype) for _ in range(3))
+    got = swa_attn(q, k, v, window=W, tq=tq, interpret=True)
+    want = swa_attn_ref(q, k, v, window=W)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    assert jnp.allclose(got.astype(jnp.float32), want.astype(jnp.float32),
+                        atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 chunked WKV
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,N,C",
+                         [(2, 64, 2, 16, 16), (1, 128, 3, 32, 32),
+                          (2, 96, 1, 8, 32), (1, 64, 2, 64, 64)])
+def test_rwkv6_wkv_matches_sequential(B, S, H, N, C):
+    from repro.kernels.rwkv6_scan.kernel import rwkv6_wkv
+    from repro.kernels.rwkv6_scan.ref import rwkv6_wkv_ref
+    r, k, v = (_arr((B, S, H, N)) for _ in range(3))
+    w = jnp.asarray(RNG.uniform(0.4, 0.99, (B, S, H, N)), jnp.float32)
+    u = _arr((H, N), scale=0.1)
+    y_got, s_got = rwkv6_wkv(r, k, v, w, u, chunk=C, interpret=True)
+    y_want, s_want = rwkv6_wkv_ref(r, k, v, w, u)
+    assert jnp.allclose(y_got, y_want, atol=1e-3)
+    assert jnp.allclose(s_got, s_want, atol=1e-3)
+
+
+def test_rwkv6_extreme_decays_stable():
+    """Near-zero decays (log w very negative) must not overflow/NaN."""
+    from repro.kernels.rwkv6_scan.kernel import rwkv6_wkv
+    B, S, H, N = 1, 64, 1, 8
+    r, k, v = (_arr((B, S, H, N)) for _ in range(3))
+    w = jnp.full((B, S, H, N), 1e-6)
+    y, s = rwkv6_wkv(r, k, v, w, _arr((H, N)), chunk=16, interpret=True)
+    assert jnp.isfinite(y).all() and jnp.isfinite(s).all()

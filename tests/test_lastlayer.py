@@ -1,0 +1,100 @@
+"""Last-layer gradient extraction + tensor-JL sketching properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.lastlayer import (
+    lm_unit_exact,
+    lm_unit_sketch,
+    make_proj_for,
+    rnnt_unit_exact,
+    streamed_er2,
+    units_gradients,
+)
+from repro.core.sketch import exact_from_factors, make_projections, sketch_from_factors
+from repro.models.api import build_model
+
+
+def test_lm_exact_gradient_matches_autodiff():
+    """The analytic H^T(P-Y) last-layer gradient must equal jax.grad of the
+    training loss w.r.t. the head weight."""
+    cfg = get_config("minitron-8b-smoke")   # untied head
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init_params(key)
+    batch = m.make_batch(key, 3, 12)
+    g_analytic = lm_unit_exact(m, params, batch)
+
+    def loss_of_head(w):
+        p2 = dict(params, lm_head={"w": w})
+        return m.per_example_loss(p2, batch, remat=False).mean()
+
+    g_auto = jax.grad(loss_of_head)(params["lm_head"]["w"])
+    assert jnp.allclose(g_analytic, g_auto.reshape(-1), atol=1e-4), \
+        float(jnp.abs(g_analytic - g_auto.reshape(-1)).max())
+
+
+def test_rnnt_exact_gradient_matches_autodiff():
+    cfg = get_config("rnnt-crdnn-smoke")
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init_params(key)
+    batch = m.make_batch(key, 2, 32)
+    g = rnnt_unit_exact(m, params, batch)
+
+    def loss_of_joint(w):
+        p2 = dict(params, joint=dict(params["joint"], w_out=w))
+        return m.loss_fn(p2, batch)[0]
+
+    g_auto = jax.grad(loss_of_joint)(params["joint"]["w_out"])
+    assert jnp.allclose(g, g_auto.reshape(-1), atol=1e-4), \
+        float(jnp.abs(g - g_auto.reshape(-1)).max())
+
+
+def test_sketch_unbiased_inner_products():
+    """Tensor-JL property: sketched inner products concentrate around the
+    exact gradient inner products (averaged over projections)."""
+    rng = np.random.default_rng(0)
+    dh, dv, n = 24, 500, 8
+    Hs = [jnp.asarray(rng.normal(size=(20, dh)), jnp.float32) for _ in range(n)]
+    Es = [jnp.asarray(rng.normal(size=(20, dv)) * 0.1, jnp.float32)
+          for _ in range(n)]
+    exact = [exact_from_factors(h, e) for h, e in zip(Hs, Es)]
+    trials = []
+    for t in range(6):
+        proj = make_projections(jax.random.PRNGKey(t), dh, dv, 96, 96)
+        sk = [sketch_from_factors(h, e, proj) for h, e in zip(Hs, Es)]
+        trials.append(float(sk[0] @ sk[1]))
+    want = float(exact[0] @ exact[1])
+    norm = float(jnp.linalg.norm(exact[0]) * jnp.linalg.norm(exact[1]))
+    err = abs(np.mean(trials) - want) / norm
+    assert err < 0.15, (np.mean(trials), want, err)
+
+
+def test_streamed_er2_invariant_to_chunk_size():
+    rng = np.random.default_rng(1)
+    h = jnp.asarray(rng.normal(size=(30, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 213)), jnp.float32)
+    rv = jnp.asarray(rng.normal(size=(213, 8)), jnp.float32)
+    t = jnp.asarray(rng.integers(0, 213, 30), jnp.int32)
+    s = jnp.ones((30,))
+    outs = [streamed_er2(h, w, t, s, rv, chunk=c) for c in (16, 64, 213, 512)]
+    for o in outs[1:]:
+        assert jnp.allclose(outs[0], o, atol=1e-4)
+
+
+def test_units_gradients_shape_and_determinism():
+    cfg = get_config("starcoder2-3b-smoke")
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init_params(key)
+    units = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[m.make_batch(jax.random.PRNGKey(i), 2, 16) for i in range(5)])
+    proj = make_proj_for(m, key, 16, 16)
+    g1 = units_gradients(m, params, units, proj)
+    g2 = units_gradients(m, params, units, proj)
+    assert g1.shape == (5, 256)
+    assert jnp.allclose(g1, g2)

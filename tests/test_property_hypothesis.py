@@ -1,0 +1,81 @@
+"""Hypothesis property-based tests on the system's core invariants
+(complements the explicit seeded sweeps in proptest.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gm import gm_select
+from repro.core.lastlayer import streamed_er2
+from repro.core.rnnt_loss import rnnt_loss_from_logits
+from repro.core.sketch import exact_from_factors, make_projections, sketch_from_factors
+
+FAST = settings(max_examples=10, deadline=None)
+
+
+@FAST
+@given(st.integers(0, 10_000), st.integers(6, 24), st.integers(8, 48),
+       st.integers(1, 6))
+def test_omp_invariants(seed, n, D, budget):
+    """For any gradient matrix/target: no duplicate picks, budget
+    respected, non-negative weights, padded slots zeroed, finite error."""
+    rng = np.random.default_rng(seed)
+    G = jnp.asarray(rng.normal(size=(n, D)), jnp.float32)
+    g_t = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+    res = gm_select(G, g_t, budget=budget, lam=1e-3)
+    sel = [int(i) for i in res.indices if i >= 0]
+    assert len(sel) == len(set(sel))
+    assert len(sel) <= budget
+    assert float(res.weights.min()) >= 0.0
+    for i, w in zip(res.indices, res.weights):
+        if int(i) < 0:
+            assert float(w) == 0.0
+    assert np.isfinite(float(res.error))
+
+
+@FAST
+@given(st.integers(0, 10_000), st.integers(4, 20), st.integers(5, 40),
+       st.sampled_from([3, 7, 16]))
+def test_streamed_er2_chunk_invariance(seed, n_tok, vocab, chunk):
+    """E @ R2 must not depend on the vocab streaming chunk size."""
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(n_tok, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, vocab)), jnp.float32)
+    rv = jnp.asarray(rng.normal(size=(vocab, 4)), jnp.float32)
+    t = jnp.asarray(rng.integers(0, vocab, n_tok), jnp.int32)
+    s = jnp.asarray(rng.uniform(0.1, 1.0, n_tok), jnp.float32)
+    a = streamed_er2(h, w, t, s, rv, chunk=chunk)
+    b = streamed_er2(h, w, t, s, rv, chunk=vocab)
+    assert jnp.allclose(a, b, atol=1e-4), float(jnp.abs(a - b).max())
+
+
+@FAST
+@given(st.integers(0, 10_000))
+def test_sketch_inner_product_symmetry(seed):
+    """<S1,S2> == <S2,S1> and ||S||^2 >= 0 for any factors/projections."""
+    rng = np.random.default_rng(seed)
+    proj = make_projections(jax.random.PRNGKey(seed % 97), 6, 30, 8, 8)
+    h1, h2 = (jnp.asarray(rng.normal(size=(5, 6)), jnp.float32)
+              for _ in range(2))
+    e1, e2 = (jnp.asarray(rng.normal(size=(5, 30)), jnp.float32)
+              for _ in range(2))
+    s1 = sketch_from_factors(h1, e1, proj)
+    s2 = sketch_from_factors(h2, e2, proj)
+    assert np.isclose(float(s1 @ s2), float(s2 @ s1), rtol=1e-5)
+    assert float(s1 @ s1) >= 0.0
+
+
+@FAST
+@given(st.integers(0, 10_000), st.integers(3, 7), st.integers(1, 4),
+       st.integers(3, 8))
+def test_rnnt_loss_is_valid_nll(seed, T, U, V):
+    """Transducer NLL is finite and non-negative for any logits (it is a
+    -log of a probability marginalized over alignments)."""
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(2, T, U + 1, V)), jnp.float32)
+    labels = jnp.asarray(rng.integers(1, V, (2, U)), jnp.int32)
+    t_lens = jnp.asarray([T, max(T - 1, U)], jnp.int32)
+    u_lens = jnp.asarray([U, max(U - 1, 1)], jnp.int32)
+    nll = rnnt_loss_from_logits(logits, labels, t_lens, u_lens)
+    assert bool(jnp.isfinite(nll).all())
+    assert float(nll.min()) >= 0.0

@@ -1,0 +1,201 @@
+"""Substrate tests: optimizer, newbob, checkpoint (atomic/async/corruption/
+elastic restore), gradient compression, data pipeline determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import (
+    asr_units,
+    full_iterator,
+    lm_units,
+    subset_iterator,
+    unit_durations,
+)
+from repro.data.synthetic import make_asr_corpus, make_lm_corpus
+from repro.train import checkpoint as ck
+from repro.train.compress import init_error_state, topk_compress
+from repro.train.optim import (
+    NewbobState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    sgd_init,
+    sgd_update,
+)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_problem():
+    p = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(5.0)}
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    return p, loss
+
+
+@pytest.mark.parametrize("opt", ["sgd", "sgd_mom", "adamw"])
+def test_optimizers_converge_on_quadratic(opt):
+    p, loss = _quad_problem()
+    if opt == "adamw":
+        st = adamw_init(p)
+        upd = lambda p, g, s: adamw_update(p, g, s, lr=0.3)
+    else:
+        mom = 0.9 if opt == "sgd_mom" else 0.0
+        st = sgd_init(p, mom)
+        upd = lambda p, g, s: sgd_update(p, g, s, lr=0.1, momentum=mom)
+    for _ in range(100):
+        g = jax.grad(loss)(p)
+        p, st = upd(p, g, st)
+    assert float(loss(p)) < 1e-2, float(loss(p))
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(norm) == 20.0
+
+
+def test_newbob_anneals_on_plateau():
+    nb = NewbobState(2.0)
+    nb = nb.update(10.0)             # first epoch: no anneal
+    assert nb.lr == 2.0
+    nb = nb.update(5.0)              # big improvement: keep
+    assert nb.lr == 2.0
+    nb = nb.update(4.999)            # tiny improvement: anneal x0.8
+    assert abs(nb.lr - 1.6) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    t = _tree()
+    ck.save(d, 3, t, extra={"epoch": 3})
+    restored, manifest = ck.restore(d, template=t)
+    assert manifest["step"] == 3 and manifest["extra"]["epoch"] == 3
+    assert jnp.allclose(restored["params"]["w"], t["params"]["w"])
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    d = str(tmp_path / "ck")
+    ck.save(d, 1, _tree())
+    # flip bytes in the array file
+    p = os.path.join(d, "step_1", "arrays.npz")
+    data = bytearray(open(p, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(p, "wb").write(bytes(data))
+    with pytest.raises(Exception):
+        ck.restore(d, template=_tree())
+
+
+def test_checkpoint_latest_and_atomicity(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 5, 3):
+        ck.save(d, s, _tree())
+    assert ck.latest_step(d) == 3          # LATEST pointer, not max
+    # a stale tmp dir must not break anything
+    os.makedirs(os.path.join(d, ".tmp_9"), exist_ok=True)
+    ck.save(d, 9, _tree())
+    assert ck.latest_step(d) == 9
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "ck")
+    ac = ck.AsyncCheckpointer(d)
+    for s in range(3):
+        ac.submit(s, _tree(), {"epoch": s})
+    ac.close()
+    assert ck.latest_step(d) == 2
+    _, manifest = ck.restore(d, template=_tree())
+    assert manifest["extra"]["epoch"] == 2
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore with a sharding_fn placing arrays on the (single) device —
+    exercises the elastic-resharding code path."""
+    d = str(tmp_path / "ck")
+    ck.save(d, 0, _tree())
+    dev = jax.devices()[0]
+    sh = jax.sharding.SingleDeviceSharding(dev)
+    restored, _ = ck.restore(d, template=_tree(),
+                             sharding_fn=lambda path, a: sh)
+    assert restored["params"]["w"].sharding == sh
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_topk_error_feedback_preserves_mass():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
+                          jnp.float32)}
+    err = init_error_state(g)
+    sent, new_err = topk_compress(g, err, k_frac=0.25)
+    # sent + residual == original
+    assert jnp.allclose(sent["w"] + new_err["w"], g["w"], atol=1e-6)
+    nz = int((sent["w"] != 0).sum())
+    assert nz <= 17  # 25% of 64 + threshold ties
+    # second round: residual is re-injected
+    sent2, err2 = topk_compress(g, new_err, k_frac=0.25)
+    assert jnp.allclose(sent2["w"] + err2["w"], g["w"] + new_err["w"],
+                        atol=1e-6)
+
+
+def test_compressed_sgd_still_converges():
+    """top-k + error feedback on a quadratic still reaches the optimum."""
+    p = jnp.asarray(np.random.default_rng(1).normal(size=(32,)), jnp.float32)
+    err = {"p": jnp.zeros_like(p)}
+    loss = lambda p: 0.5 * jnp.sum(p ** 2)
+    for _ in range(300):
+        g = {"p": jax.grad(loss)(p)}
+        sent, err = topk_compress(g, err, k_frac=0.1)
+        p = p - 0.2 * sent["p"]
+    assert float(loss(p)) < 1e-3, float(loss(p))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_lm_corpus_structure():
+    c = make_lm_corpus(0, 64, 32, 300, hard_fraction=0.5, noise_fraction=0.2)
+    assert c.tokens.shape == (64, 32)
+    assert 0.4 <= c.difficulty.mean() <= 0.6
+    assert int(c.noisy.sum()) == 12
+    assert (c.tokens[np.arange(64), np.maximum(c.lengths - 1, 0)] > 0).all()
+
+
+def test_asr_corpus_learnable():
+    c = make_asr_corpus(0, 16, n_feats=8, vocab_size=10)
+    assert c.feats.shape[0] == 16
+    assert (c.token_lens >= 4).all()
+
+
+def test_iterators_deterministic_and_weighted():
+    c = make_lm_corpus(0, 32, 16, 100)
+    units = lm_units(c, 4)
+    a = [b["tokens"].sum() for b in full_iterator(units, seed=1, epoch=2)]
+    b = [b["tokens"].sum() for b in full_iterator(units, seed=1, epoch=2)]
+    assert a == b
+    c2 = [x["tokens"].sum() for x in full_iterator(units, seed=1, epoch=3)]
+    assert a != c2                         # reshuffled across epochs
+    idx, w = np.asarray([0, 3, 5]), np.asarray([2.0, 1.0, 0.5])
+    batches = list(subset_iterator(units, idx, w, seed=0, epoch=0))
+    assert len(batches) == 3
+    for bt in batches:
+        assert set(np.unique(bt["weights"])) <= {0.5, 1.0, 2.0}
+    dur = unit_durations(units)
+    assert dur.shape == (8,)

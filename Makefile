@@ -1,0 +1,20 @@
+# Developer entry points.  PYTHONPATH=src is applied here so the targets
+# work from a clean checkout.
+
+PY := python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test-fast test-all bench
+
+# fast tier: everything not marked slow (< ~90s) — the development loop
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+# tier-1 verify: the full suite, fail-fast (what the CI gate runs)
+test-all:
+	$(PY) -m pytest -x -q
+
+# paper tables + kernel micro-benchmarks + train-loop engine benchmark
+# (writes BENCH_train_loop.json at the repo root)
+bench:
+	$(PY) -m benchmarks.run

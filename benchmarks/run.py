@@ -2,11 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV — one row per measured cell, one
 section per paper table/figure (benchmarks/tables.py), plus kernel
-micro-benchmarks and (when dry-run artifacts exist) the roofline table.
-REPRO_BENCH_SCALE=micro|small scales corpus/epoch counts.
+micro-benchmarks, the train-loop engine benchmark (also written to
+``BENCH_train_loop.json`` at the repo root so PRs can track the
+steps/sec trajectory) and (when dry-run artifacts exist) the roofline
+table.  REPRO_BENCH_SCALE=micro|small scales corpus/epoch counts.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -17,6 +20,7 @@ def main() -> None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from benchmarks.tables import ALL_TABLES
     from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.bench_train_loop import bench_train_loop
 
     print("name,us_per_call,derived")
     for fn in ALL_TABLES:
@@ -32,6 +36,27 @@ def main() -> None:
               file=sys.stderr)
     for r in bench_kernels():
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+    # train-loop engine benchmark + JSON trajectory artifact
+    try:
+        rows = bench_train_loop()
+    except Exception as e:
+        print(f"bench_train_loop,0,ERROR={type(e).__name__}:{e}")
+        rows = []
+    record = {"time": time.time()}
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        key = r["name"].split("/", 1)[1]
+        if r["steps_per_s"]:
+            record[key + "_steps_per_s"] = round(r["steps_per_s"], 2)
+        if "speedup" in r:
+            record["scan_over_host_speedup"] = round(r["speedup"], 3)
+    if rows:
+        out = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_train_loop.json")
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {os.path.normpath(out)}", file=sys.stderr)
 
     # roofline table from dry-run artifacts, if the sweep has run
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",

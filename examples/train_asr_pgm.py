@@ -76,6 +76,7 @@ def main():
     ap.add_argument("--subset", type=float, default=0.3)
     ap.add_argument("--epochs", type=int, default=8)
     ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--engine", default="scan", choices=["scan", "host"])
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -98,7 +99,7 @@ def main():
     from repro.train.loop import train_with_selection
     h = train_with_selection(bundle, units, tc, method=args.method,
                              val_units=val, ckpt_dir=args.ckpt,
-                             log_fn=print)
+                             engine=args.engine, log_fn=print)
 
     hyp, n_sym = greedy_decode(bundle, h.final_params,
                                jnp.asarray(val_c.feats),

@@ -4,7 +4,11 @@ run on CPU, full configs are for real accelerators).
 
   PYTHONPATH=src python examples/train_lm_pgm.py --arch starcoder2-3b-smoke
       [--method pgm] [--subset 0.3] [--epochs 6] [--n 96] [--noise 0.0]
-      [--ckpt DIR] [--resume]
+      [--engine scan|host] [--ckpt DIR] [--resume]
+
+``--engine scan`` (default) runs each epoch as one device-resident
+jitted lax.scan over the precomputed batch plan; ``--engine host`` is
+the legacy one-jit-call-per-batch loop kept as the parity oracle.
 
 Use ``--arch minitron-8b`` (etc.) unchanged on a TPU slice; the launcher
 (`repro.launch.train`) applies the production mesh + sharding policies.
@@ -33,6 +37,7 @@ def main():
     ap.add_argument("--n", type=int, default=96)
     ap.add_argument("--seq", type=int, default=24)
     ap.add_argument("--noise", type=float, default=0.0)
+    ap.add_argument("--engine", default="scan", choices=["scan", "host"])
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
@@ -52,7 +57,8 @@ def main():
                       val_matching=args.noise > 0))
     h = train_with_selection(bundle, units, tc, method=args.method,
                              val_units=val, ckpt_dir=args.ckpt,
-                             resume=args.resume, log_fn=print)
+                             resume=args.resume, engine=args.engine,
+                             log_fn=print)
     if h.val_loss:
         print(f"\nfinal: val loss {h.val_loss[-1]:.4f}, cost "
               f"{h.cost_units:.2f} full-epoch units, "

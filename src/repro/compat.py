@@ -1,0 +1,38 @@
+"""Version-robust wrappers over JAX APIs that moved between releases.
+
+``shard_map`` has lived in three places/signatures across the JAX
+versions this repo must run on:
+
+  * ``jax.shard_map``                      (new API, ``check_vma=`` kwarg)
+  * ``jax.experimental.shard_map.shard_map`` (older API, ``check_rep=``)
+
+All in-repo code imports :func:`shard_map` from here; the wrapper
+translates the ``check_vma``/``check_rep`` spelling to whatever the
+installed JAX understands (the two kwargs mean the same thing — skip the
+replication/varying-manual-axes check for bodies that create fresh
+carries inside the mapped region).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+try:  # JAX >= 0.6: top-level jax.shard_map
+    from jax import shard_map as _shard_map_impl  # type: ignore[attr-defined]
+except ImportError:  # older JAX: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_IMPL_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Any = None, **kwargs):
+    """Dispatch to the installed JAX's shard_map, translating the
+    vma/rep-check kwarg.  ``check_vma=None`` means "library default"."""
+    if check_vma is not None:
+        if "check_vma" in _IMPL_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _IMPL_PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)

@@ -17,6 +17,7 @@ equivalent of the paper's "one GM per GPU".
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
@@ -91,6 +92,8 @@ def pgm_select(
     pgm_cfg,
     proj: Optional[Projections] = None,
     val_units=None,               # validation units when val_matching
+    mesh=None,                    # stage B via shard_map when provided
+    data_axis: str = "data",
 ) -> Selection:
     n_units = jax.tree.leaves(units)[0].shape[0]
     budget_total = max(int(pgm_cfg.subset_fraction * n_units), 1)
@@ -105,9 +108,24 @@ def pgm_select(
         # validation target: mean gradient scaled to the partition mass so
         # budgets/weights stay comparable with train matching
         g_val = gv.mean(axis=0) * (n_units / D)
+    if mesh is not None and _mesh_divides(mesh, data_axis, D, n_units):
+        # same code path on 1 and N devices: partitions are distributed
+        # over the data axis, each shard runs its OMPs locally
+        cfg = pgm_cfg if pgm_cfg.n_partitions == D else \
+            dataclasses.replace(pgm_cfg, n_partitions=D)
+        return pgm_select_sharded(mesh, data_axis, g, cfg, g_val=g_val)
     return partitioned_gm(
         g, D, budget_per, pgm_cfg.lam, pgm_cfg.eps,
         pgm_cfg.nonneg_weights, pgm_cfg.val_matching, g_val)
+
+
+def _mesh_divides(mesh, axis: str, n_partitions: int, n_units: int) -> bool:
+    """shard_map stage B needs whole partitions (and whole units) per
+    shard; fall back to the single-device jit when they don't divide."""
+    if axis not in mesh.axis_names:
+        return False
+    size = mesh.shape[axis]
+    return n_partitions % size == 0 and n_units % size == 0
 
 
 # ---------------------------------------------------------------------------
@@ -122,7 +140,8 @@ def pgm_select_sharded(mesh, axis: str, g_units, pgm_cfg, g_val=None):
     g_units: (n, D) global array (sharded on axis 0 by the caller).
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax import shard_map
+
+    from repro.compat import shard_map
 
     n = g_units.shape[0]
     size = mesh.shape[axis]

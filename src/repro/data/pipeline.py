@@ -55,29 +55,55 @@ def unit_durations(units: Dict[str, np.ndarray]) -> np.ndarray:
     return units["loss_mask"].sum(axis=(1, 2)).astype(np.float32)
 
 
+# ---------------------------------------------------------------------------
+# Epoch plans: the (seed, epoch)-keyed batch schedule as index/weight arrays.
+# The scanned epoch engine (train/engine.py) gathers batches from these on
+# device; the host iterators below are thin views over the same plans, so
+# both execution paths see byte-identical batch order by construction.
+# ---------------------------------------------------------------------------
+
+def epoch_plan(n_units: int, seed: int, epoch: int,
+               batch_units: int = 1) -> np.ndarray:
+    """Full-data epoch schedule -> (n_steps, batch_units) int32 unit ids.
+    Seeded shuffle of all units, remainder dropped (warm-start phase)."""
+    order = np.random.default_rng((seed, epoch)).permutation(n_units)
+    n_steps = n_units // batch_units
+    return order[: n_steps * batch_units].reshape(
+        n_steps, batch_units).astype(np.int32)
+
+
+def subset_epoch_plan(indices, weights, seed: int, epoch: int,
+                      batch_units: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """Weighted-subset epoch schedule -> (unit ids, unit weights), each
+    (n_steps, batch_units).  Drops -1 padding, shuffles the survivors with
+    the (seed, epoch, 1) stream, drops the remainder."""
+    valid = np.asarray(indices) >= 0
+    idx = np.asarray(indices)[valid]
+    w = np.asarray(weights)[valid]
+    order = np.random.default_rng((seed, epoch, 1)).permutation(len(idx))
+    idx, w = idx[order], w[order]
+    n_steps = len(idx) // batch_units
+    shape = (n_steps, batch_units)
+    return (idx[: n_steps * batch_units].reshape(shape).astype(np.int32),
+            w[: n_steps * batch_units].reshape(shape).astype(np.float32))
+
+
 def full_iterator(units, seed: int, epoch: int,
                   batch_units: int = 1) -> Iterator[Dict[str, np.ndarray]]:
     """Iterate all units in a seeded epoch shuffle (warm-start phase)."""
     nu = units[next(iter(units))].shape[0]
-    order = np.random.default_rng((seed, epoch)).permutation(nu)
-    for i in range(0, nu - nu % batch_units, batch_units):
-        sel = order[i : i + batch_units]
+    for sel in epoch_plan(nu, seed, epoch, batch_units):
         yield {k: _merge_units(v[sel]) for k, v in units.items()}
 
 
 def subset_iterator(units, indices, weights, seed: int, epoch: int,
                     batch_units: int = 1) -> Iterator[Dict[str, np.ndarray]]:
     """Weighted iteration over a PGM/baseline selection."""
-    valid = np.asarray(indices) >= 0
-    idx = np.asarray(indices)[valid]
-    w = np.asarray(weights)[valid]
-    order = np.random.default_rng((seed, epoch, 1)).permutation(len(idx))
-    idx, w = idx[order], w[order]
-    for i in range(0, len(idx) - len(idx) % batch_units, batch_units):
-        sel = idx[i : i + batch_units]
+    plan_idx, plan_w = subset_epoch_plan(indices, weights, seed, epoch,
+                                         batch_units)
+    for sel, w in zip(plan_idx, plan_w):
         batch = {k: _merge_units(v[sel]) for k, v in units.items()}
-        uw = np.repeat(w[i : i + batch_units],
-                       units["weights"].shape[1]).astype(np.float32)
+        uw = np.repeat(w, units["weights"].shape[1]).astype(np.float32)
         batch["weights"] = batch["weights"] * uw
         yield batch
 

@@ -1,30 +1,109 @@
-"""Training launcher CLI.
+"""Training launcher: mesh + sharding policy around Algorithm 1.
 
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b-smoke
-      --method pgm --epochs 6 [--ckpt DIR] [--resume] [--noise 0.2]
+      --method pgm --epochs 6 [--engine scan|host] [--mesh 2x4]
+      [--ckpt DIR] [--resume] [--noise 0.2]
 
-On a real TPU slice the same entry point applies the production mesh and
-the per-family sharding policy (``--mesh single|multi``); on CPU it runs
-the smoke-scale loop (identity sharding) for development and CI.
+``launch_train`` is the programmatic entry point the examples and
+benchmarks share.  With ``--mesh DATAxMODEL`` the selection units are
+device_put sharded over ``data`` (the scanned epoch engine preserves
+placement, so its gathers/updates partition under GSPMD) and PGM stage B
+routes through ``pgm_select_sharded`` — the same code path on 1 and N
+devices.  On CPU without a mesh it runs the smoke-scale loop for
+development and CI.
 """
 from __future__ import annotations
 
 import argparse
+from typing import Dict, Optional
 
 import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.base import PGMConfig, TrainConfig
 from repro.data.pipeline import asr_units, lm_units
 from repro.data.synthetic import make_asr_corpus, make_lm_corpus
 from repro.models.api import build_model
-from repro.train.loop import train_with_selection
+from repro.train.loop import History, train_with_selection
+
+
+def parse_mesh(spec: Optional[str]):
+    """'2x4' -> a (data, model) mesh; None/'' -> no mesh (single device)."""
+    if not spec:
+        return None
+    dims = tuple(int(x) for x in spec.lower().split("x"))
+    if len(dims) != 2:
+        raise ValueError(f"mesh spec must be DATAxMODEL, got {spec!r}")
+    return jax.make_mesh(dims, ("data", "model"))
+
+
+def shard_units(units: Dict[str, np.ndarray], mesh,
+                data_axis: str = "data") -> Dict:
+    """Place units on the mesh sharded over ``data_axis`` along the
+    leading (n_units) dim when divisible; replicated otherwise."""
+    if mesh is None:
+        return units
+    n = units[next(iter(units))].shape[0]
+    ax = data_axis if n % mesh.shape[data_axis] == 0 else None
+    return {k: jax.device_put(
+                v, NamedSharding(mesh, P(ax, *([None] * (v.ndim - 1)))))
+            for k, v in units.items()}
+
+
+def make_units_for(cfg, *, n: int, seq: int, noise: float, seed: int = 0,
+                   unit_size: int = 4):
+    """(train units, val units) for the arch family — RNN-T gets the ASR
+    corpus, everything else the LM corpus."""
+    if cfg.family == "rnnt":
+        r = cfg.rnnt
+        corpus = make_asr_corpus(seed, n, n_feats=r.n_feats,
+                                 vocab_size=r.vocab_size,
+                                 noise_fraction=noise)
+        vc = make_asr_corpus(seed + 7, max(n // 4, 8), n_feats=r.n_feats,
+                             vocab_size=r.vocab_size)
+        return asr_units(corpus, unit_size), asr_units(vc, unit_size)
+    corpus = make_lm_corpus(seed, n, seq, cfg.vocab_size,
+                            noise_fraction=noise)
+    vc = make_lm_corpus(seed + 7, max(n // 4, 8), seq, cfg.vocab_size)
+    return lm_units(corpus, unit_size), lm_units(vc, unit_size)
+
+
+def launch_train(
+    arch: str,
+    tc: TrainConfig,
+    *,
+    method: str = "pgm",
+    engine: str = "scan",
+    mesh=None,
+    data_axis: str = "data",
+    n: int = 96,
+    seq: int = 24,
+    noise: float = 0.0,
+    batch_units: int = 1,
+    ckpt_dir: Optional[str] = None,
+    resume: bool = False,
+    log_fn=print,
+) -> History:
+    cfg = get_config(arch)
+    bundle = build_model(cfg)
+    units, val = make_units_for(cfg, n=n, seq=seq, noise=noise, seed=tc.seed)
+    units = shard_units(units, mesh, data_axis)
+    val = shard_units(val, mesh, data_axis)
+    return train_with_selection(
+        bundle, units, tc, method=method, val_units=val,
+        batch_units=batch_units, ckpt_dir=ckpt_dir, resume=resume,
+        engine=engine, mesh=mesh, data_axis=data_axis, log_fn=log_fn)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--method", default="pgm")
+    ap.add_argument("--engine", default="scan", choices=["scan", "host"])
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL, e.g. 2x4 (default: no mesh)")
     ap.add_argument("--subset", type=float, default=0.3)
     ap.add_argument("--partitions", type=int, default=4)
     ap.add_argument("--select-every", type=int, default=5)
@@ -43,25 +122,6 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    bundle = build_model(cfg)
-    if cfg.family == "rnnt":
-        corpus = make_asr_corpus(args.seed, args.n,
-                                 n_feats=cfg.rnnt.n_feats,
-                                 vocab_size=cfg.rnnt.vocab_size,
-                                 noise_fraction=args.noise)
-        units = asr_units(corpus, 4)
-        vc = make_asr_corpus(args.seed + 7, max(args.n // 4, 8),
-                             n_feats=cfg.rnnt.n_feats,
-                             vocab_size=cfg.rnnt.vocab_size)
-        val = asr_units(vc, 4)
-    else:
-        corpus = make_lm_corpus(args.seed, args.n, args.seq, cfg.vocab_size,
-                                noise_fraction=args.noise)
-        units = lm_units(corpus, 4)
-        val = lm_units(make_lm_corpus(args.seed + 7, max(args.n // 4, 8),
-                                      args.seq, cfg.vocab_size), 4)
-
     tc = TrainConfig(
         lr=args.lr, optimizer=args.optimizer, epochs=args.epochs,
         seed=args.seed,
@@ -71,9 +131,10 @@ def main():
                       warm_start_epochs=args.warm_start,
                       val_matching=args.noise > 0,
                       use_sketch=not args.exact_gradients))
-    h = train_with_selection(bundle, units, tc, method=args.method,
-                             val_units=val, ckpt_dir=args.ckpt,
-                             resume=args.resume, log_fn=print)
+    h = launch_train(args.arch, tc, method=args.method, engine=args.engine,
+                     mesh=parse_mesh(args.mesh), n=args.n, seq=args.seq,
+                     noise=args.noise, ckpt_dir=args.ckpt,
+                     resume=args.resume)
     if h.val_loss:
         print(f"done: val {h.val_loss[-1]:.4f}, "
               f"cost {h.cost_units:.2f} epoch-units, "

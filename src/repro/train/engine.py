@@ -1,0 +1,129 @@
+"""Device-resident scanned epoch engine for Algorithm 1's SGD phase.
+
+The legacy host loop assembles every batch in numpy, copies it to device
+and dispatches one jit call per step, then validates one example per
+Python iteration.  Here the whole corpus of selection units lives on
+device once; an epoch is a single jitted ``lax.scan`` over a precomputed
+(seed, epoch)-keyed batch plan (``data/pipeline.epoch_plan`` /
+``subset_epoch_plan``), with ``(params, opt_state)`` donated so the
+update runs in-place instead of round-tripping buffers.  Weighted-subset
+epochs are expressed as index+weight arrays gathered inside jit — no
+regenerated host batches — and validation is one vmapped call over the
+validation units.
+
+One compiled executable is reused for every epoch with the same step
+count (full epochs share one; subset epochs share another as long as the
+selection budget is stable), so steady-state epochs pay zero tracing or
+host-device transfer beyond the tiny plan arrays.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import epoch_plan, subset_epoch_plan
+from repro.train.optim import clip_by_global_norm, make_update_for
+
+
+def make_step_core(bundle, cfg: TrainConfig):
+    """The un-jitted per-batch SGD update shared by the legacy host loop
+    (which jits it per call) and the scanned engine (which embeds it in
+    the scan body)."""
+    _, opt_update = make_update_for(cfg)
+
+    def step(params, opt_state, batch, lr):
+        def loss(p):
+            total, metrics = bundle.loss_fn(p, batch)
+            return total, metrics
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        params, opt_state = opt_update(params, grads, opt_state, lr)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return step
+
+
+class EpochEngine:
+    """Scanned-epoch executor around a ModelBundle.
+
+    ``units`` (and optional ``val_units``) are moved to device once at
+    construction.  ``run_epoch`` consumes a batch plan and returns the
+    updated ``(params, opt_state)`` plus per-step losses; ``validate``
+    returns the mean per-unit validation loss.  Inputs to ``run_epoch``
+    are donated: the caller must treat the passed-in ``params`` /
+    ``opt_state`` as consumed and continue with the returned values.
+    """
+
+    def __init__(self, bundle, cfg: TrainConfig,
+                 units: Dict[str, Any],
+                 val_units: Optional[Dict[str, Any]] = None,
+                 batch_units: int = 1):
+        self.bundle = bundle
+        self.cfg = cfg
+        self.batch_units = int(batch_units)
+        self.units = {k: jnp.asarray(v) for k, v in units.items()}
+        self.val_units = (None if val_units is None else
+                          {k: jnp.asarray(v) for k, v in val_units.items()})
+        self.n_units = int(jax.tree.leaves(self.units)[0].shape[0])
+        self.unit_size = int(jax.tree.leaves(self.units)[0].shape[1])
+        step_core = make_step_core(bundle, cfg)
+        unit_size = self.unit_size
+
+        def run(params, opt_state, units_dev, batch_idx, batch_w, lr):
+            def body(carry, xs):
+                p, s = carry
+                idx, w = xs
+                batch = {
+                    k: v[idx].reshape((-1,) + v.shape[2:])
+                    for k, v in units_dev.items()
+                }
+                if "weights" in batch:
+                    batch = dict(batch, weights=batch["weights"]
+                                 * jnp.repeat(w, unit_size))
+                p, s, metrics = step_core(p, s, batch, lr)
+                return (p, s), metrics["loss"]
+
+            (params, opt_state), losses = jax.lax.scan(
+                body, (params, opt_state), (batch_idx, batch_w))
+            return params, opt_state, losses
+
+        # donate (params, opt_state): the scan carry re-uses their buffers
+        self._run = jax.jit(run, donate_argnums=(0, 1))
+
+        def validate(params, val_dev):
+            per_unit = jax.vmap(
+                lambda u: bundle.per_example_loss(params, u).mean())(val_dev)
+            return per_unit.mean()
+
+        self._validate = jax.jit(validate)
+
+    # ------------------------------------------------------------------
+    def full_plan(self, epoch: int) -> Tuple[jax.Array, jax.Array]:
+        """(seed, epoch)-keyed full-data plan; unit weights are 1."""
+        idx = epoch_plan(self.n_units, self.cfg.seed, epoch, self.batch_units)
+        return jnp.asarray(idx), jnp.ones(idx.shape, jnp.float32)
+
+    def subset_plan(self, indices, weights,
+                    epoch: int) -> Tuple[jax.Array, jax.Array]:
+        idx, w = subset_epoch_plan(np.asarray(indices), np.asarray(weights),
+                                   self.cfg.seed, epoch, self.batch_units)
+        return jnp.asarray(idx), jnp.asarray(w)
+
+    def run_epoch(self, params, opt_state, lr,
+                  plan: Tuple[jax.Array, jax.Array]):
+        """One scanned epoch.  Returns (params, opt_state, losses (n_steps,))
+        — the passed params/opt_state buffers are donated."""
+        batch_idx, batch_w = plan
+        return self._run(params, opt_state, self.units, batch_idx, batch_w,
+                         jnp.asarray(lr, jnp.float32))
+
+    def validate(self, params) -> float:
+        if self.val_units is None:
+            return float("nan")
+        return float(self._validate(params, self.val_units))

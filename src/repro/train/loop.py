@@ -3,6 +3,16 @@ ModelBundle: warm-start on full data, re-selection every R epochs
 (PGM or a baseline), weighted mini-batch SGD on the subset, newbob lr
 annealing on validation loss, checkpoint/resume, and cost accounting
 (the basis of the paper's speedup numbers).
+
+Two execution engines share the selection/annealing/checkpoint logic:
+
+  * ``engine="scan"`` (default) — the device-resident scanned epoch
+    engine (train/engine.py): units live on device, each epoch is one
+    donated jit(lax.scan) over a precomputed batch plan, validation is
+    one vmapped call;
+  * ``engine="host"`` — the legacy per-batch host loop, kept as the
+    parity oracle (tests/test_train_engine.py proves the two produce
+    the same losses and selections).
 """
 from __future__ import annotations
 
@@ -25,7 +35,8 @@ from repro.data.pipeline import (
     unit_durations,
 )
 from repro.train import checkpoint as ckpt_mod
-from repro.train.optim import NewbobState, clip_by_global_norm, make_optimizer
+from repro.train.engine import EpochEngine, make_step_core
+from repro.train.optim import NewbobState, make_update_for
 
 
 @dataclasses.dataclass
@@ -40,24 +51,7 @@ class History:
 
 
 def make_train_step(bundle, cfg: TrainConfig):
-    _, opt_update = make_optimizer(cfg.optimizer)
-
-    @jax.jit
-    def step(params, opt_state, batch, lr):
-        def loss(p):
-            total, metrics = bundle.loss_fn(p, batch)
-            return total, metrics
-
-        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
-        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
-        params, opt_state = opt_update(
-            params, grads, opt_state, lr,
-            **({"momentum": cfg.momentum} if cfg.optimizer == "sgd" else {}),
-            weight_decay=cfg.weight_decay)
-        metrics = dict(metrics, grad_norm=gnorm)
-        return params, opt_state, metrics
-
-    return step
+    return jax.jit(make_step_core(bundle, cfg))
 
 
 def make_eval(bundle):
@@ -68,13 +62,13 @@ def make_eval(bundle):
 
 
 def _select(method, bundle, params, units, tc: TrainConfig, key, proj,
-            val_units, durations):
+            val_units, durations, mesh=None, data_axis: str = "data"):
     pc = tc.pgm
     n_units = jax.tree.leaves(units)[0].shape[0]
     budget = max(int(pc.subset_fraction * n_units), 1)
     if method == "pgm":
         return pgm_select(bundle, params, units, pc, proj,
-                          val_units=val_units)
+                          val_units=val_units, mesh=mesh, data_axis=data_axis)
     if method == "random":
         return bl.random_subset(key, n_units, budget)
     if method == "large_only":
@@ -106,18 +100,30 @@ def train_with_selection(
     batch_units: int = 1,
     ckpt_dir: Optional[str] = None,
     resume: bool = False,
+    engine: str = "scan",           # scan (device-resident) | host (legacy)
+    mesh=None,                      # route PGM stage B via shard_map
+    data_axis: str = "data",
     log_fn: Callable[[str], None] = lambda s: None,
 ) -> History:
+    if engine not in ("scan", "host"):
+        raise ValueError(f"unknown engine {engine!r}")
     key = jax.random.PRNGKey(tc.seed) if key is None else key
     params = bundle.init_params(key)
-    opt_init, _ = make_optimizer(tc.optimizer)
-    opt_state = opt_init(params) if tc.optimizer != "sgd" \
-        else opt_init(params, tc.momentum)
-    step_fn = make_train_step(bundle, tc)
-    eval_fn = make_eval(bundle)
-    units_dev = {k: jnp.asarray(v) for k, v in units.items()}
-    val_dev = (None if val_units is None
-               else {k: jnp.asarray(v) for k, v in val_units.items()})
+    opt_init, _ = make_update_for(tc)
+    opt_state = opt_init(params)
+    scan_engine: Optional[EpochEngine] = None
+    if engine == "scan":
+        scan_engine = EpochEngine(bundle, tc, units, val_units=val_units,
+                                  batch_units=batch_units)
+        units_dev = scan_engine.units
+        val_dev = scan_engine.val_units
+        step_fn = eval_fn = None
+    else:
+        step_fn = make_train_step(bundle, tc)
+        eval_fn = make_eval(bundle)
+        units_dev = {k: jnp.asarray(v) for k, v in units.items()}
+        val_dev = (None if val_units is None
+                   else {k: jnp.asarray(v) for k, v in val_units.items()})
     durations = unit_durations(units)
     proj = make_proj_for(bundle, jax.random.fold_in(key, 17),
                          tc.pgm.sketch_dim_h, tc.pgm.sketch_dim_v)
@@ -134,10 +140,11 @@ def train_with_selection(
         newbob = NewbobState(manifest["extra"]["lr"],
                              manifest["extra"]["prev_loss"])
         if manifest["extra"].get("sel_indices") is not None:
+            sel_idx = manifest["extra"]["sel_indices"]
             selection = Selection(
-                jnp.asarray(manifest["extra"]["sel_indices"], jnp.int32),
+                jnp.asarray(sel_idx, jnp.int32),
                 jnp.asarray(manifest["extra"]["sel_weights"], jnp.float32),
-                jnp.asarray(len(manifest["extra"]["sel_indices"])),
+                jnp.asarray(sum(1 for i in sel_idx if i >= 0)),
                 jnp.zeros((1,)))
         log_fn(f"resumed at epoch {start_epoch}")
 
@@ -151,7 +158,8 @@ def train_with_selection(
                 or (epoch - tc.pgm.warm_start_epochs) % tc.pgm.select_every == 0):
             sel_key = jax.random.fold_in(key, 1000 + epoch)
             new_sel = _select(method, bundle, params, units_dev, tc, sel_key,
-                              proj, val_dev, durations)
+                              proj, val_dev, durations, mesh=mesh,
+                              data_axis=data_axis)
             oi = (overlap_index(np.asarray(selection.indices),
                                 np.asarray(new_sel.indices))
                   if selection is not None else float("nan"))
@@ -171,27 +179,40 @@ def train_with_selection(
 
         # --- epoch of SGD ---
         if use_full:
-            it = full_iterator(units, tc.seed, epoch, batch_units)
             hist.cost_units += 1.0
         else:
-            it = subset_iterator(units, np.asarray(selection.indices),
-                                 np.asarray(selection.weights),
-                                 tc.seed, epoch, batch_units)
             hist.cost_units += float(int(selection.n_selected)) / n_units
-        losses = []
-        for batch in it:
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                                 newbob.lr)
-            losses.append(float(metrics["loss"]))
-        train_loss = float(np.mean(losses)) if losses else float("nan")
+        if scan_engine is not None:
+            plan = (scan_engine.full_plan(epoch) if use_full else
+                    scan_engine.subset_plan(selection.indices,
+                                            selection.weights, epoch))
+            params, opt_state, step_losses = scan_engine.run_epoch(
+                params, opt_state, newbob.lr, plan)
+            losses = np.asarray(step_losses, np.float64)
+            train_loss = float(losses.mean()) if losses.size else float("nan")
+        else:
+            it = (full_iterator(units, tc.seed, epoch, batch_units)
+                  if use_full else
+                  subset_iterator(units, np.asarray(selection.indices),
+                                  np.asarray(selection.weights),
+                                  tc.seed, epoch, batch_units))
+            losses = []
+            for batch in it:
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                     newbob.lr)
+                losses.append(float(metrics["loss"]))
+            train_loss = float(np.mean(losses)) if losses else float("nan")
 
         # --- validation + newbob ---
         if val_dev is not None:
-            vl = float(np.mean([
-                float(eval_fn(params,
-                              {k: v[i] for k, v in val_dev.items()}))
-                for i in range(jax.tree.leaves(val_dev)[0].shape[0])]))
+            if scan_engine is not None:
+                vl = scan_engine.validate(params)
+            else:
+                vl = float(np.mean([
+                    float(eval_fn(params,
+                                  {k: v[i] for k, v in val_dev.items()}))
+                    for i in range(jax.tree.leaves(val_dev)[0].shape[0])]))
             newbob = newbob.update(vl, tc.anneal_factor,
                                    tc.improvement_threshold)
         else:

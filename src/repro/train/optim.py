@@ -93,6 +93,24 @@ def make_optimizer(name: str):
     raise ValueError(name)
 
 
+def make_update_for(cfg):
+    """Bind a TrainConfig's optimizer hyper-parameters once, so the host
+    loop and the scanned epoch engine share one (init, update) pair:
+    ``init(params) -> state``; ``update(params, grads, state, lr)``."""
+    init, update = make_optimizer(cfg.optimizer)
+    kw = {"momentum": cfg.momentum} if cfg.optimizer == "sgd" else {}
+
+    def init_fn(params):
+        return init(params, cfg.momentum) if cfg.optimizer == "sgd" \
+            else init(params)
+
+    def update_fn(params, grads, state, lr):
+        return update(params, grads, state, lr,
+                      weight_decay=cfg.weight_decay, **kw)
+
+    return init_fn, update_fn
+
+
 # ---------------------------------------------------------------------------
 # newbob scheduler (paper: lr 2.0, anneal 0.8 on rel. improvement < 0.0025)
 # ---------------------------------------------------------------------------

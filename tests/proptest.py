@@ -29,7 +29,14 @@ def sweep(cases: Iterable):
     ids = ["-".join(str(x) for x in c) for c in cases]
 
     def deco(fn: Callable):
-        return pytest.mark.parametrize(
-            "case", cases, ids=ids)(lambda case: fn(*case))
+        # a plain wrapper (not functools.wraps): pytest must see the
+        # single 'case' parameter, but needs the original test name
+        def runner(case):
+            fn(*case)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return pytest.mark.parametrize("case", cases, ids=ids)(runner)
 
     return deco

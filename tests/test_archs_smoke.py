@@ -10,6 +10,10 @@ from repro.configs import get_config, list_archs
 from repro.models.api import build_model
 from repro.train.optim import make_optimizer, clip_by_global_norm
 
+# one compile per arch adds up to minutes — slow tier (the fast tier
+# exercises the LM + RNN-T smoke configs via tests/test_train_engine.py)
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 
 

@@ -58,6 +58,7 @@ def test_appendix_a_bound():
     assert part_err >= full_err - 1e-4
 
 
+@pytest.mark.slow
 def test_sketched_selection_agrees_with_exact():
     cfg = get_config("minitron-8b-smoke")
     m = build_model(cfg)
@@ -76,6 +77,7 @@ def test_sketched_selection_agrees_with_exact():
     assert len(a & b) >= int(0.6 * len(b)), (a, b)
 
 
+@pytest.mark.slow
 def test_val_matching_runs_and_differs():
     cfg = get_config("minitron-8b-smoke")
     m = build_model(cfg)

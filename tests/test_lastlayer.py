@@ -17,6 +17,7 @@ from repro.core.sketch import exact_from_factors, make_projections, sketch_from_
 from repro.models.api import build_model
 
 
+@pytest.mark.slow
 def test_lm_exact_gradient_matches_autodiff():
     """The analytic H^T(P-Y) last-layer gradient must equal jax.grad of the
     training loss w.r.t. the head weight."""
@@ -36,6 +37,7 @@ def test_lm_exact_gradient_matches_autodiff():
         float(jnp.abs(g_analytic - g_auto.reshape(-1)).max())
 
 
+@pytest.mark.slow
 def test_rnnt_exact_gradient_matches_autodiff():
     cfg = get_config("rnnt-crdnn-smoke")
     m = build_model(cfg)

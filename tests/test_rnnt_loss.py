@@ -26,6 +26,7 @@ def _ref(logits, labels, t_len, u_len, blank=0):
     return -(alpha[t_len - 1, U] + lp[t_len - 1, U, blank])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed,T,U,V",
                          rand_cases(6, 7, seed=range(50), T=[4, 7, 11],
                                     U=[2, 4, 6], V=[5, 13]))
@@ -44,6 +45,7 @@ def test_rnnt_loss_matches_bruteforce(seed, T, U, V):
     assert np.allclose(got, want, atol=1e-4), np.abs(got - want).max()
 
 
+@pytest.mark.slow
 def test_rnnt_loss_grad_finite_and_nonzero():
     rng = np.random.default_rng(0)
     logits = jnp.asarray(rng.normal(size=(2, 6, 4, 5)), jnp.float32)

@@ -11,6 +11,9 @@ import textwrap
 import numpy as np
 import pytest
 
+# every test here lowers+compiles in an 8-device subprocess — slow tier
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
@@ -77,7 +80,7 @@ def test_compressed_psum_modes():
     out = _run(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.compat import shard_map
         from repro.train.compress import compressed_psum, init_error_state
         mesh = jax.make_mesh((8,), ("pod",))
         g = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}

@@ -6,6 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# full Algorithm-1 training runs (minutes in aggregate) — slow tier; the
+# fast tier covers the engine via tests/test_train_engine.py
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config
 from repro.configs.base import PGMConfig, TrainConfig
 from repro.core.metrics import (

@@ -1,0 +1,180 @@
+"""Scanned epoch engine (train/engine.py): parity against the legacy
+host loop on both an LM-smoke and the RNN-T-smoke config, plus fast
+micro-properties — batch-plan determinism across resume, weighted-batch
+weight expansion, and donation not retaining stale buffers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import PGMConfig, TrainConfig
+from repro.data.pipeline import (
+    asr_units,
+    epoch_plan,
+    lm_units,
+    subset_epoch_plan,
+    subset_iterator,
+)
+from repro.data.synthetic import make_asr_corpus, make_lm_corpus
+from repro.models.api import build_model
+from repro.train.engine import EpochEngine
+from repro.train.loop import train_with_selection
+
+
+def _lm_setup(n=32, seq=12, epochs=4):
+    cfg = get_config("starcoder2-3b-smoke")
+    m = build_model(cfg)
+    units = lm_units(make_lm_corpus(0, n, seq, cfg.vocab_size,
+                                    hard_fraction=0.4), unit_size=4)
+    val = lm_units(make_lm_corpus(7, 16, seq, cfg.vocab_size), unit_size=4)
+    tc = TrainConfig(
+        lr=0.5, optimizer="sgd", epochs=epochs,
+        pgm=PGMConfig(subset_fraction=0.5, n_partitions=2, select_every=2,
+                      warm_start_epochs=1, sketch_dim_h=24, sketch_dim_v=24))
+    return m, units, val, tc
+
+
+def _rnnt_setup(n=16, epochs=3):
+    cfg = get_config("rnnt-crdnn-smoke")
+    m = build_model(cfg)
+    r = cfg.rnnt
+    units = asr_units(make_asr_corpus(0, n, n_feats=r.n_feats,
+                                      vocab_size=r.vocab_size,
+                                      noise_fraction=0.2), 4)
+    val = asr_units(make_asr_corpus(5, 8, n_feats=r.n_feats,
+                                    vocab_size=r.vocab_size), 4)
+    tc = TrainConfig(
+        lr=0.05, optimizer="adamw", epochs=epochs,
+        pgm=PGMConfig(subset_fraction=0.5, n_partitions=2, select_every=2,
+                      warm_start_epochs=1, sketch_dim_h=16, sketch_dim_v=16,
+                      val_matching=True))
+    return m, units, val, tc
+
+
+# ---------------------------------------------------------------------------
+# Parity: identical seeds => the scanned engine reproduces the legacy
+# host loop's per-epoch losses and selected indices
+# ---------------------------------------------------------------------------
+
+def _assert_history_parity(h_host, h_scan, atol):
+    assert np.allclose(h_host.train_loss, h_scan.train_loss, atol=atol), \
+        (h_host.train_loss, h_scan.train_loss)
+    assert np.allclose(h_host.val_loss, h_scan.val_loss, atol=atol), \
+        (h_host.val_loss, h_scan.val_loss)
+    assert len(h_host.selections) == len(h_scan.selections)
+    for sh, ss in zip(h_host.selections, h_scan.selections):
+        assert sh["epoch"] == ss["epoch"]
+        assert sh["indices"] == ss["indices"], (sh, ss)
+        assert np.allclose(sh["weights"], ss["weights"], atol=atol)
+    assert h_host.cost_units == pytest.approx(h_scan.cost_units)
+
+
+def test_scan_engine_matches_host_loop_lm():
+    m, units, val, tc = _lm_setup()
+    h_host = train_with_selection(m, units, tc, method="pgm", val_units=val,
+                                  engine="host")
+    h_scan = train_with_selection(m, units, tc, method="pgm", val_units=val,
+                                  engine="scan")
+    _assert_history_parity(h_host, h_scan, atol=1e-3)
+
+
+@pytest.mark.slow
+def test_scan_engine_matches_host_loop_rnnt():
+    m, units, val, tc = _rnnt_setup()
+    h_host = train_with_selection(m, units, tc, method="pgm", val_units=val,
+                                  engine="host")
+    h_scan = train_with_selection(m, units, tc, method="pgm", val_units=val,
+                                  engine="scan")
+    _assert_history_parity(h_host, h_scan, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Micro-properties (fast tier)
+# ---------------------------------------------------------------------------
+
+def test_epoch_plan_determinism_across_resume():
+    """The (seed, epoch) keying makes the schedule a pure function — a
+    resumed run rebuilds byte-identical plans for the remaining epochs."""
+    for epoch in (0, 3):
+        a = epoch_plan(12, seed=5, epoch=epoch, batch_units=2)
+        b = epoch_plan(12, seed=5, epoch=epoch, batch_units=2)
+        assert a.shape == (6, 2) and np.array_equal(a, b)
+        assert sorted(a.reshape(-1).tolist()) == list(range(12))
+    assert not np.array_equal(epoch_plan(12, 5, 0), epoch_plan(12, 5, 1))
+    assert not np.array_equal(epoch_plan(12, 5, 0), epoch_plan(12, 6, 0))
+
+    idx = np.asarray([3, 7, -1, 1, 5, -1], np.int32)
+    w = np.asarray([1.0, 2.0, 0.0, 0.5, 1.5, 0.0], np.float32)
+    pi1, pw1 = subset_epoch_plan(idx, w, seed=5, epoch=2, batch_units=2)
+    pi2, pw2 = subset_epoch_plan(idx, w, seed=5, epoch=2, batch_units=2)
+    assert np.array_equal(pi1, pi2) and np.array_equal(pw1, pw2)
+    assert pi1.shape == (2, 2)                       # -1 dropped, 4//2 steps
+    assert set(pi1.reshape(-1).tolist()) <= {3, 7, 1, 5}
+    # weights travel with their indices through the shuffle
+    by_idx = dict(zip(idx.tolist(), w.tolist()))
+    for i, ww in zip(pi1.reshape(-1), pw1.reshape(-1)):
+        assert by_idx[int(i)] == float(ww)
+
+
+def test_subset_iterator_matches_plan():
+    """The host iterator is a view over the same plan (order parity by
+    construction)."""
+    units = {"tokens": np.arange(48, dtype=np.int32).reshape(12, 4),
+             "weights": np.ones((12, 4), np.float32)}
+    idx = np.asarray([0, 2, 4, 6, 8, 10], np.int32)
+    w = np.linspace(0.5, 3.0, 6).astype(np.float32)
+    pi, pw = subset_epoch_plan(idx, w, seed=1, epoch=0, batch_units=2)
+    batches = list(subset_iterator(units, idx, w, seed=1, epoch=0,
+                                   batch_units=2))
+    assert len(batches) == pi.shape[0]
+    for (sel, ww), b in zip(zip(pi, pw), batches):
+        assert np.array_equal(b["tokens"],
+                              units["tokens"][sel].reshape(-1))
+        assert np.allclose(b["weights"], np.repeat(ww, 4))
+
+
+def test_weighted_batch_weights_reach_the_loss():
+    """Per-unit OMP weights must scale the per-example loss weights inside
+    the scanned batch exactly like the host iterator does."""
+    m, units, _, tc = _lm_setup(n=16, epochs=1)
+    eng = EpochEngine(m, tc, units, batch_units=2)
+    idx = np.asarray([0, 1, 2, 3], np.int32)
+    w = np.asarray([2.0, 0.5, 1.0, 3.0], np.float32)
+    plan_idx, plan_w = eng.subset_plan(idx, w, epoch=0)
+    # reconstruct the first scanned batch by hand
+    sel, ww = np.asarray(plan_idx)[0], np.asarray(plan_w)[0]
+    want = units["weights"][sel].reshape(-1) * np.repeat(ww, eng.unit_size)
+    got = np.asarray(eng.units["weights"])[sel].reshape(-1) \
+        * np.repeat(ww, eng.unit_size)
+    assert np.allclose(got, want)
+    # and a weight-2x selection changes the loss vs weight-1x
+    params = m.init_params(jax.random.PRNGKey(0))
+    opt0 = {"step": jnp.zeros((), jnp.int32)}
+    p1, o1, losses_w = eng.run_epoch(params, opt0, 0.0,
+                                     (plan_idx, plan_w))
+    params2 = m.init_params(jax.random.PRNGKey(0))
+    ones = jnp.ones_like(plan_w)
+    p2, o2, losses_1 = eng.run_epoch(params2, {"step": jnp.zeros((), jnp.int32)},
+                                     0.0, (plan_idx, ones))
+    assert losses_w.shape == losses_1.shape == (2,)
+    assert not np.allclose(np.asarray(losses_w), np.asarray(losses_1))
+
+
+def test_donation_does_not_retain_stale_buffers():
+    """run_epoch donates (params, opt_state): the inputs' buffers are
+    consumed (deleted when the backend supports donation) and the engine
+    keeps working from the returned state — nothing stale is retained."""
+    m, units, _, tc = _lm_setup(n=16, epochs=1)
+    eng = EpochEngine(m, tc, units, batch_units=2)
+    params = m.init_params(jax.random.PRNGKey(0))
+    opt_state = {"step": jnp.zeros((), jnp.int32)}
+    in_leaf = jax.tree.leaves(params)[0]
+    p1, o1, l1 = eng.run_epoch(params, opt_state, tc.lr,
+                               eng.full_plan(epoch=0))
+    assert in_leaf.is_deleted(), "donated params buffer was retained"
+    # chaining from the returned state works (nothing references the old
+    # buffers), and the second epoch is a cache hit on the same executable
+    p2, o2, l2 = eng.run_epoch(p1, o1, tc.lr, eng.full_plan(epoch=1))
+    assert np.isfinite(np.asarray(l2)).all()
+    assert int(o2["step"]) == 2 * l1.shape[0]

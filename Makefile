@@ -4,9 +4,9 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all bench
+.PHONY: test-fast test-all bench docs-check
 
-# fast tier: everything not marked slow (< ~90s) — the development loop
+# fast tier: everything not marked slow (< ~2 min) — the development loop
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
@@ -14,7 +14,11 @@ test-fast:
 test-all:
 	$(PY) -m pytest -x -q
 
-# paper tables + kernel micro-benchmarks + train-loop engine benchmark
-# (writes BENCH_train_loop.json at the repo root)
+# paper tables + kernel micro-benchmarks + train-loop / selection-round
+# benchmarks (writes BENCH_*.json at the repo root)
 bench:
 	$(PY) -m benchmarks.run
+
+# docs integrity: no dangling file refs / make targets / DESIGN.md § cites
+docs-check:
+	$(PY) -m pytest -q tests/test_docs.py

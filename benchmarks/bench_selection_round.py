@@ -1,0 +1,91 @@
+"""Selection-round benchmark: latency of one full PGM selection round
+(stage A gradient sketching + stage B partitioned OMP) via the legacy
+host path (``pgm_select``: sequential per-unit ``lax.map`` dispatched
+from host each round) vs the resident path (``ResidentSelector``: one
+jitted batch-scanned pass over the device-resident units, executable and
+projections cached across rounds) on the LM-smoke config.
+
+Methodology (DESIGN.md §7): container CPU speed drifts ±30% on ~10s
+timescales, so host/resident rounds are interleaved (both sample the
+same noise), the headline per-path latency is best-of over rounds, and
+the headline speedup is the median of per-round ratios.  Warmup rounds
+pay compile for both paths — this measures the steady-state per-round
+cost Algorithm 1 pays every ``select_every`` epochs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bench_selection_round(n_examples: int = 128, seq: int = 12,
+                          unit_size: int = 2, rounds: int = 5,
+                          warmup_rounds: int = 2) -> List[Dict]:
+    from repro.configs import get_config
+    from repro.configs.base import PGMConfig
+    from repro.core.lastlayer import make_proj_for
+    from repro.core.pgm import ResidentSelector, pgm_select
+    from repro.data.pipeline import lm_units
+    from repro.data.synthetic import make_lm_corpus
+    from repro.models.api import build_model
+
+    cfg = get_config("starcoder2-3b-smoke")
+    bundle = build_model(cfg)
+    corpus = make_lm_corpus(0, n_examples, seq, cfg.vocab_size,
+                            hard_fraction=0.4)
+    units = {k: jnp.asarray(v)
+             for k, v in lm_units(corpus, unit_size=unit_size).items()}
+    n_units = int(units["tokens"].shape[0])
+    key = jax.random.PRNGKey(0)
+    params = bundle.init_params(key)
+    pc = PGMConfig(subset_fraction=0.3, n_partitions=4,
+                   sketch_dim_h=32, sketch_dim_v=32)
+    proj = make_proj_for(bundle, jax.random.fold_in(key, 17), 32, 32)
+    selector = ResidentSelector(bundle, pc, proj)
+
+    def host_round():
+        sel = pgm_select(bundle, params, units, pc, proj)
+        jax.block_until_ready(sel.indices)
+
+    def resident_round():
+        sel = selector(params, units)
+        jax.block_until_ready(sel.indices)
+
+    for _ in range(warmup_rounds):
+        host_round()
+        resident_round()
+
+    host_s, res_s = [], []
+    for _ in range(rounds):
+        t0 = time.time()
+        host_round()
+        host_s.append(time.time() - t0)
+        t0 = time.time()
+        resident_round()
+        res_s.append(time.time() - t0)
+    host_best = min(host_s)
+    res_best = min(res_s)
+    speedup = float(np.median([h / r for h, r in zip(host_s, res_s)]))
+    return [
+        {"name": "selection_round/host", "us_per_call": host_best * 1e6,
+         "derived": f"round_ms={host_best*1e3:.1f};n_units={n_units}",
+         "round_ms": host_best * 1e3},
+        {"name": "selection_round/resident", "us_per_call": res_best * 1e6,
+         "derived": f"round_ms={res_best*1e3:.1f};n_units={n_units}",
+         "round_ms": res_best * 1e3},
+        {"name": "selection_round/speedup", "us_per_call": 0.0,
+         "derived": f"resident_over_host={speedup:.2f}x",
+         "round_ms": 0.0, "speedup": speedup},
+    ]
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    for r in bench_selection_round():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

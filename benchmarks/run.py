@@ -2,10 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV — one row per measured cell, one
 section per paper table/figure (benchmarks/tables.py), plus kernel
-micro-benchmarks, the train-loop engine benchmark (also written to
-``BENCH_train_loop.json`` at the repo root so PRs can track the
-steps/sec trajectory) and (when dry-run artifacts exist) the roofline
-table.  REPRO_BENCH_SCALE=micro|small scales corpus/epoch counts.
+micro-benchmarks, the train-loop engine benchmark and the
+selection-round benchmark (also written to ``BENCH_train_loop.json`` /
+``BENCH_selection_round.json`` at the repo root so PRs can track the
+trajectory) and (when dry-run artifacts exist) the roofline table.
+REPRO_BENCH_SCALE=micro|small scales corpus/epoch counts.
 """
 from __future__ import annotations
 
@@ -37,26 +38,38 @@ def main() -> None:
     for r in bench_kernels():
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
 
-    # train-loop engine benchmark + JSON trajectory artifact
-    try:
-        rows = bench_train_loop()
-    except Exception as e:
-        print(f"bench_train_loop,0,ERROR={type(e).__name__}:{e}")
-        rows = []
-    record = {"time": time.time()}
-    for r in rows:
-        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
-        key = r["name"].split("/", 1)[1]
-        if r["steps_per_s"]:
-            record[key + "_steps_per_s"] = round(r["steps_per_s"], 2)
-        if "speedup" in r:
-            record["scan_over_host_speedup"] = round(r["speedup"], 3)
-    if rows:
-        out = os.path.join(os.path.dirname(__file__), "..",
-                           "BENCH_train_loop.json")
+    # engine + selection-round benchmarks, each with a JSON trajectory
+    # artifact at the repo root
+    def run_json_bench(fn, out_name, value_key, value_suffix, speedup_key):
+        try:
+            rows = fn()
+        except Exception as e:
+            print(f"{fn.__name__},0,ERROR={type(e).__name__}:{e}")
+            return
+        record = {"time": time.time()}
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+            key = r["name"].split("/", 1)[1]
+            if r[value_key]:
+                record[key + value_suffix] = round(r[value_key], 2)
+            if "speedup" in r:
+                record[speedup_key] = round(r["speedup"], 3)
+        out = os.path.join(os.path.dirname(__file__), "..", out_name)
         with open(out, "w") as f:
             json.dump(record, f, indent=2)
         print(f"# wrote {os.path.normpath(out)}", file=sys.stderr)
+
+    def _bench_selection_round():
+        # deferred import so a broken bench module reports as an ERROR row
+        # instead of aborting the harness before the other benchmarks
+        from benchmarks.bench_selection_round import bench_selection_round
+        return bench_selection_round()
+    _bench_selection_round.__name__ = "bench_selection_round"
+
+    run_json_bench(bench_train_loop, "BENCH_train_loop.json",
+                   "steps_per_s", "_steps_per_s", "scan_over_host_speedup")
+    run_json_bench(_bench_selection_round, "BENCH_selection_round.json",
+                   "round_ms", "_round_ms", "resident_over_host_speedup")
 
     # roofline table from dry-run artifacts, if the sweep has run
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",

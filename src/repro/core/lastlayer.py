@@ -29,9 +29,11 @@ from repro.core.sketch import Projections, exact_from_factors, sketch_from_facto
 # LM factor extraction
 # ---------------------------------------------------------------------------
 
-def lm_unit_factors(bundle, params, batch):
+def lm_unit_factors(bundle, params, batch, shard=None):
     """-> (h (N,d) fp32, targets (N,), scale (N,) fp32).  N = B*(S-1)."""
-    h, targets, mask, _ = bundle.final_hidden(params, batch, remat=False)
+    from repro.models.common import IDENTITY_SHARDER
+    h, targets, mask, _ = bundle.final_hidden(
+        params, batch, shard=shard or IDENTITY_SHARDER, remat=False)
     B = h.shape[0]
     denom = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1.0)
     scale = (mask / (denom * B)).astype(jnp.float32)
@@ -84,17 +86,17 @@ def streamed_er2(h, w_head, targets, scale, r_v, chunk: int = 8192):
 
 
 def lm_unit_sketch(bundle, params, batch, proj: Projections,
-                   vocab_chunk: int = 8192) -> jax.Array:
-    h, targets, scale = lm_unit_factors(bundle, params, batch)
+                   vocab_chunk: int = 8192, shard=None) -> jax.Array:
+    h, targets, scale = lm_unit_factors(bundle, params, batch, shard)
     w = bundle.head_weight(params)
     er2 = streamed_er2(h, w, targets, scale, proj.r_v, vocab_chunk)
     hr = h @ proj.r_h
     return (hr.T @ er2).reshape(-1)
 
 
-def lm_unit_exact(bundle, params, batch) -> jax.Array:
+def lm_unit_exact(bundle, params, batch, shard=None) -> jax.Array:
     """Paper-faithful: full flattened lm_head gradient (small models only)."""
-    h, targets, scale = lm_unit_factors(bundle, params, batch)
+    h, targets, scale = lm_unit_factors(bundle, params, batch, shard)
     w = bundle.head_weight(params)
     logits = h @ w.astype(jnp.float32)
     p = jax.nn.softmax(logits, axis=-1)
@@ -108,11 +110,13 @@ def lm_unit_exact(bundle, params, batch) -> jax.Array:
 # transducer loss (the analytic LM shortcut doesn't apply to the lattice).
 # ---------------------------------------------------------------------------
 
-def rnnt_unit_factors(bundle, params, batch):
+def rnnt_unit_factors(bundle, params, batch, shard=None):
     from repro.models import rnnt as rnnt_mod
+    from repro.models.common import IDENTITY_SHARDER
     cfg = bundle.cfg
     r = cfg.rnnt
-    z, _, _, _ = bundle.final_hidden(params, batch)            # (B,T,U1,J)
+    z, _, _, _ = bundle.final_hidden(
+        params, batch, shard=shard or IDENTITY_SHARDER)        # (B,T,U1,J)
     w_out = bundle.head_weight(params)
 
     def loss_of_logits(logits):
@@ -131,13 +135,14 @@ def rnnt_unit_factors(bundle, params, batch):
             e.reshape(-1, e.shape[-1]))
 
 
-def rnnt_unit_sketch(bundle, params, batch, proj: Projections) -> jax.Array:
-    h, e = rnnt_unit_factors(bundle, params, batch)
+def rnnt_unit_sketch(bundle, params, batch, proj: Projections,
+                     shard=None) -> jax.Array:
+    h, e = rnnt_unit_factors(bundle, params, batch, shard)
     return sketch_from_factors(h, e, proj)
 
 
-def rnnt_unit_exact(bundle, params, batch) -> jax.Array:
-    h, e = rnnt_unit_factors(bundle, params, batch)
+def rnnt_unit_exact(bundle, params, batch, shard=None) -> jax.Array:
+    h, e = rnnt_unit_factors(bundle, params, batch, shard)
     return exact_from_factors(h, e)
 
 
@@ -146,13 +151,15 @@ def rnnt_unit_exact(bundle, params, batch) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def unit_gradient(bundle, params, batch, proj: Optional[Projections],
-                  exact: bool = False, vocab_chunk: int = 8192) -> jax.Array:
+                  exact: bool = False, vocab_chunk: int = 8192,
+                  shard=None) -> jax.Array:
     """One selection unit -> gradient representation vector."""
     if bundle.cfg.family == "rnnt":
-        return (rnnt_unit_exact(bundle, params, batch) if exact
-                else rnnt_unit_sketch(bundle, params, batch, proj))
-    return (lm_unit_exact(bundle, params, batch) if exact
-            else lm_unit_sketch(bundle, params, batch, proj, vocab_chunk))
+        return (rnnt_unit_exact(bundle, params, batch, shard) if exact
+                else rnnt_unit_sketch(bundle, params, batch, proj, shard))
+    return (lm_unit_exact(bundle, params, batch, shard) if exact
+            else lm_unit_sketch(bundle, params, batch, proj, vocab_chunk,
+                                shard))
 
 
 def units_gradients(bundle, params, units, proj: Optional[Projections],
@@ -164,26 +171,78 @@ def units_gradients(bundle, params, units, proj: Optional[Projections],
     return jax.lax.map(fn, units)
 
 
-def units_gradients_batched(bundle, params, units, proj: Projections,
+def _chunk_size(U: int, chunk_units: Optional[int]) -> int:
+    """Largest chunk size <= the requested one that divides U."""
+    cu = min(chunk_units or max(U // 16, 1), U)
+    while U % cu:
+        cu -= 1
+    return cu
+
+
+def units_gradients_scanned(bundle, params, units,
+                            proj: Optional[Projections],
+                            exact: bool = False,
                             chunk_units: Optional[int] = None,
-                            shard=None, vocab_chunk: int = 8192) -> jax.Array:
-    """Batched stage-A sketching for the distributed selection step.
+                            vocab_chunk: int = 8192,
+                            shard=None) -> jax.Array:
+    """Family-agnostic batched stage A: scan over unit *chunks*, vmap the
+    per-unit gradient representation within a chunk.  Peak memory is
+    bounded by ``chunk_units`` forward passes (vs one for the fully
+    sequential ``units_gradients``, vs all for a flat vmap); the scan keeps
+    it a single executable so a jitted selection round dispatches once.
+    Used for RNN-T (autodiff through the transducer lattice resists the
+    flattened-example trick below) and for the exact/paper-faithful path.
+    ``shard`` is forwarded into the per-unit forward pass for activation
+    sharding constraints; note that unlike the flattened LM path this
+    still scans the (possibly sharded) unit axis, so under a mesh it does
+    not avoid the §Perf select-iter-1 redundancy.
+    """
+    U = jax.tree.leaves(units)[0].shape[0]
+    cu = _chunk_size(U, chunk_units)
+    xs = jax.tree.map(
+        lambda a: a.reshape((U // cu, cu) + a.shape[1:]), units)
+    fn = lambda u: unit_gradient(bundle, params, u, proj, exact, vocab_chunk,
+                                 shard)
+
+    def chunk_fn(_, cb):
+        return None, jax.vmap(fn)(cb)
+
+    _, sks = jax.lax.scan(chunk_fn, None, xs)
+    return sks.reshape(U, -1)
+
+
+def units_gradients_batched(bundle, params, units,
+                            proj: Optional[Projections] = None,
+                            chunk_units: Optional[int] = None,
+                            shard=None, vocab_chunk: int = 8192,
+                            exact: bool = False) -> jax.Array:
+    """Batched stage-A gradient representations for resident/distributed
+    selection rounds.
 
     ``units_gradients`` maps sequentially over units — correct and
     memory-bounded on one host, but under GSPMD a scan over a *sharded*
     units axis degenerates to every device computing every unit (16x
-    redundant compute; §Perf select-iter-1).  Here units are flattened to
-    an example axis that stays sharded over the data mesh axes; per-unit
-    sketches are recovered with a segment contraction.  LM families only.
+    redundant compute; §Perf select-iter-1).  Here LM units are flattened
+    to an example axis that stays sharded over the data mesh axes
+    (batches of ``chunk_units`` units at a time); per-unit sketches are
+    recovered with a segment contraction.  RNN-T and the exact
+    (paper-faithful) path route through ``units_gradients_scanned`` —
+    same chunked single-executable shape, per-unit math inside a vmap.
+
+    This is the kernel of ``core/pgm.ResidentSelector``: jit it once with
+    the projections closed over and every selection round reuses both the
+    executable and the device-resident ``proj`` constants.
     """
+    if bundle.cfg.family == "rnnt" or exact:
+        return units_gradients_scanned(bundle, params, units, proj,
+                                       exact=exact, chunk_units=chunk_units,
+                                       vocab_chunk=vocab_chunk, shard=shard)
     from repro.models.common import IDENTITY_SHARDER
     shard = shard or IDENTITY_SHARDER
     lead = jax.tree.leaves(units)[0].shape
     U, b = lead[0], lead[1]
     flat = jax.tree.map(lambda a: a.reshape((U * b,) + a.shape[2:]), units)
-    cu = min(chunk_units or max(U // 16, 1), U)
-    while U % cu:
-        cu -= 1
+    cu = _chunk_size(U, chunk_units)
     n_chunks = U // cu
     xs = jax.tree.map(
         lambda a: a.reshape((n_chunks, cu * b) + a.shape[1:]), flat)

@@ -9,11 +9,17 @@ Every ``R`` epochs:
            (Val=True, robust mode), each with budget b_k/D;
   stage C  concatenate the partial subsets and their weights.
 
-Distribution (DESIGN.md §5): stage A is a plain GSPMD jit (units sharded
-over the ``data`` mesh axis, model params over ``model``); stage B is
-embarrassingly parallel across partitions and is dispatched with
+Distribution (docs/DESIGN.md §5): stage A is a plain GSPMD jit (units
+sharded over the ``data`` mesh axis, model params over ``model``); stage
+B is embarrassingly parallel across partitions and is dispatched with
 ``shard_map`` over ``data`` in ``pgm_select_sharded`` — the jax-native
 equivalent of the paper's "one GM per GPU".
+
+Residency (docs/DESIGN.md §1): ``ResidentSelector`` runs stage A as one
+jitted batch-scanned pass over the epoch engine's device-resident unit
+buffers, with the sketch projections closed over the jit so both the
+executable and the projection constants are reused across selection
+rounds — no per-round host round-trip.
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gm
-from repro.core.lastlayer import units_gradients
+from repro.core.lastlayer import units_gradients, units_gradients_batched
 from repro.core.sketch import Projections
 
 
@@ -85,6 +91,33 @@ def partitioned_gm(
 # Full Algorithm 1 selection round (stages A + B)
 # ---------------------------------------------------------------------------
 
+def _stage_b(g_units, pgm_cfg, g_val=None, mesh=None,
+             data_axis: str = "data") -> Selection:
+    """Dispatch stage B (partitioned OMP) over precomputed stage-A
+    gradient representations — shard_map over ``data_axis`` when a mesh
+    divides the partitions, single-device jit otherwise."""
+    n_units = g_units.shape[0]
+    budget_total = max(int(pgm_cfg.subset_fraction * n_units), 1)
+    D = min(pgm_cfg.n_partitions, n_units)
+    budget_per = max(budget_total // D, 1)
+    if mesh is not None and _mesh_divides(mesh, data_axis, D, n_units):
+        # same code path on 1 and N devices: partitions are distributed
+        # over the data axis, each shard runs its OMPs locally
+        cfg = pgm_cfg if pgm_cfg.n_partitions == D else \
+            dataclasses.replace(pgm_cfg, n_partitions=D)
+        return pgm_select_sharded(mesh, data_axis, g_units, cfg, g_val=g_val)
+    return partitioned_gm(
+        g_units, D, budget_per, pgm_cfg.lam, pgm_cfg.eps,
+        pgm_cfg.nonneg_weights, pgm_cfg.val_matching, g_val)
+
+
+def _val_target(gv, n_units: int, pgm_cfg) -> jax.Array:
+    """Validation target: mean gradient scaled to the partition mass so
+    budgets/weights stay comparable with train matching."""
+    D = min(pgm_cfg.n_partitions, n_units)
+    return gv.mean(axis=0) * (n_units / D)
+
+
 def pgm_select(
     bundle,
     params,
@@ -96,27 +129,67 @@ def pgm_select(
     data_axis: str = "data",
 ) -> Selection:
     n_units = jax.tree.leaves(units)[0].shape[0]
-    budget_total = max(int(pgm_cfg.subset_fraction * n_units), 1)
-    D = min(pgm_cfg.n_partitions, n_units)
-    budget_per = max(budget_total // D, 1)
     exact = not pgm_cfg.use_sketch
 
     g = units_gradients(bundle, params, units, proj, exact=exact)
     g_val = None
     if pgm_cfg.val_matching:
         gv = units_gradients(bundle, params, val_units, proj, exact=exact)
-        # validation target: mean gradient scaled to the partition mass so
-        # budgets/weights stay comparable with train matching
-        g_val = gv.mean(axis=0) * (n_units / D)
-    if mesh is not None and _mesh_divides(mesh, data_axis, D, n_units):
-        # same code path on 1 and N devices: partitions are distributed
-        # over the data axis, each shard runs its OMPs locally
-        cfg = pgm_cfg if pgm_cfg.n_partitions == D else \
-            dataclasses.replace(pgm_cfg, n_partitions=D)
-        return pgm_select_sharded(mesh, data_axis, g, cfg, g_val=g_val)
-    return partitioned_gm(
-        g, D, budget_per, pgm_cfg.lam, pgm_cfg.eps,
-        pgm_cfg.nonneg_weights, pgm_cfg.val_matching, g_val)
+        g_val = _val_target(gv, n_units, pgm_cfg)
+    return _stage_b(g, pgm_cfg, g_val=g_val, mesh=mesh, data_axis=data_axis)
+
+
+class ResidentSelector:
+    """Selection rounds over the epoch engine's device-resident units.
+
+    ``pgm_select`` recomputes stage A from scratch with a sequential
+    per-unit map dispatched from host; on the scanned engine the very
+    same unit buffers already sit on device, so a resident round is one
+    jitted batch-scanned stage-A pass (``units_gradients_batched`` —
+    sharded over the ``data`` mesh axis when the units were placed with
+    one) followed by the usual stage B.  The sketch ``Projections`` are
+    closed over the jit at construction: across rounds both the compiled
+    executable and the projection constants are reused instead of being
+    re-materialized per call.  With a mesh, stage B additionally routes
+    through ``pgm_select_sharded`` exactly like ``pgm_select``.
+
+    Usage (see ``train/loop.py``)::
+
+        selector = ResidentSelector(bundle, pgm_cfg, proj, mesh=mesh)
+        sel = selector(params, engine.units, val_units=engine.val_units)
+    """
+
+    def __init__(self, bundle, pgm_cfg, proj: Optional[Projections] = None,
+                 *, chunk_units: Optional[int] = None, mesh=None,
+                 data_axis: str = "data", vocab_chunk: int = 8192):
+        self.bundle = bundle
+        self.cfg = pgm_cfg
+        self.mesh = mesh
+        self.data_axis = data_axis
+        exact = not pgm_cfg.use_sketch
+
+        def stage_a(params, units):
+            return units_gradients_batched(
+                bundle, params, units, proj, chunk_units=chunk_units,
+                vocab_chunk=vocab_chunk, exact=exact)
+
+        # one jit for train and val units alike: the cache keys on unit
+        # shapes, so each distinct corpus compiles once and every later
+        # round is a cache hit
+        self._stage_a = jax.jit(stage_a)
+
+    def stage_a(self, params, units) -> jax.Array:
+        """(n_units, D) stage-A gradient representations, jit-cached."""
+        return self._stage_a(params, units)
+
+    def __call__(self, params, units, val_units=None) -> Selection:
+        g = self._stage_a(params, units)
+        g_val = None
+        if self.cfg.val_matching:
+            gv = self._stage_a(params, val_units)
+            g_val = _val_target(gv, g.shape[0], self.cfg)
+        return _stage_b(g, self.cfg, g_val=g_val, mesh=self.mesh,
+                        data_axis=self.data_axis)
 
 
 def _mesh_divides(mesh, axis: str, n_partitions: int, n_units: int) -> bool:

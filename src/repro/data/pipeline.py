@@ -9,6 +9,14 @@ size B, run weighted mini-batch SGD").
 
 Everything is keyed by (seed, epoch) so a restart resumes the exact
 stream (fault tolerance: the checkpoint records epoch + microstep).
+
+Two consumers share the plan arrays produced here (DESIGN.md §1/§3):
+the scanned epoch engine (`train/engine.py`) gathers batches from them
+on device — with ``pad_to_steps`` padding subset plans to a fixed shape
+so changing ``n_selected`` between selection rounds never retraces the
+epoch executable — and the host iterators below are thin unpadded views
+over the same plans, so both execution paths see byte-identical batch
+order by construction.
 """
 from __future__ import annotations
 
@@ -65,7 +73,12 @@ def unit_durations(units: Dict[str, np.ndarray]) -> np.ndarray:
 def epoch_plan(n_units: int, seed: int, epoch: int,
                batch_units: int = 1) -> np.ndarray:
     """Full-data epoch schedule -> (n_steps, batch_units) int32 unit ids.
-    Seeded shuffle of all units, remainder dropped (warm-start phase)."""
+
+    Seeded shuffle of all units, remainder dropped (warm-start phase).
+    The plan is a pure function of ``(seed, epoch)``: a resumed run
+    rebuilds byte-identical schedules for the remaining epochs, which is
+    what makes checkpoint/resume exact (see ``train/loop.py``).
+    """
     order = np.random.default_rng((seed, epoch)).permutation(n_units)
     n_steps = n_units // batch_units
     return order[: n_steps * batch_units].reshape(
@@ -73,10 +86,25 @@ def epoch_plan(n_units: int, seed: int, epoch: int,
 
 
 def subset_epoch_plan(indices, weights, seed: int, epoch: int,
-                      batch_units: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+                      batch_units: int = 1,
+                      pad_to_steps: Optional[int] = None,
+                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Weighted-subset epoch schedule -> (unit ids, unit weights), each
-    (n_steps, batch_units).  Drops -1 padding, shuffles the survivors with
-    the (seed, epoch, 1) stream, drops the remainder."""
+    ``(n_steps, batch_units)``.  Drops -1 padding from the selection,
+    shuffles the survivors with the (seed, epoch, 1) stream, drops the
+    remainder.
+
+    ``pad_to_steps`` (the retrace-free contract used by the scanned epoch
+    engine): when given, the plan is padded with *padding rows* up to
+    exactly ``(pad_to_steps, batch_units)`` — id ``-1`` and weight ``0`` —
+    so every selection round produces the same plan shape regardless of
+    ``n_selected`` and one compiled epoch executable serves them all.
+    Padding-row semantics downstream (DESIGN.md §3): the engine clamps the
+    gather index to 0, runs the step, and gates the update with
+    ``optim.gate_step`` so a padding row advances neither params nor
+    optimizer state and contributes nothing to metrics.  Host iterators
+    never see padding rows (they call this with ``pad_to_steps=None``).
+    """
     valid = np.asarray(indices) >= 0
     idx = np.asarray(indices)[valid]
     w = np.asarray(weights)[valid]
@@ -84,8 +112,19 @@ def subset_epoch_plan(indices, weights, seed: int, epoch: int,
     idx, w = idx[order], w[order]
     n_steps = len(idx) // batch_units
     shape = (n_steps, batch_units)
-    return (idx[: n_steps * batch_units].reshape(shape).astype(np.int32),
-            w[: n_steps * batch_units].reshape(shape).astype(np.float32))
+    plan_idx = idx[: n_steps * batch_units].reshape(shape).astype(np.int32)
+    plan_w = w[: n_steps * batch_units].reshape(shape).astype(np.float32)
+    if pad_to_steps is not None:
+        if n_steps > pad_to_steps:
+            raise ValueError(
+                f"subset plan needs {n_steps} steps > pad_to_steps="
+                f"{pad_to_steps}")
+        n_pad = pad_to_steps - n_steps
+        plan_idx = np.concatenate(
+            [plan_idx, np.full((n_pad, batch_units), -1, np.int32)])
+        plan_w = np.concatenate(
+            [plan_w, np.zeros((n_pad, batch_units), np.float32)])
+    return plan_idx, plan_w
 
 
 def full_iterator(units, seed: int, epoch: int,

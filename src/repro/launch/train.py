@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b-smoke
       --method pgm --epochs 6 [--engine scan|host] [--mesh 2x4]
-      [--ckpt DIR] [--resume] [--noise 0.2]
+      [--resident-selection] [--ckpt DIR] [--resume] [--noise 0.2]
 
 ``launch_train`` is the programmatic entry point the examples and
 benchmarks share.  With ``--mesh DATAxMODEL`` the selection units are
@@ -76,6 +76,7 @@ def launch_train(
     *,
     method: str = "pgm",
     engine: str = "scan",
+    resident_selection: bool = False,
     mesh=None,
     data_axis: str = "data",
     n: int = 96,
@@ -94,7 +95,8 @@ def launch_train(
     return train_with_selection(
         bundle, units, tc, method=method, val_units=val,
         batch_units=batch_units, ckpt_dir=ckpt_dir, resume=resume,
-        engine=engine, mesh=mesh, data_axis=data_axis, log_fn=log_fn)
+        engine=engine, resident_selection=resident_selection, mesh=mesh,
+        data_axis=data_axis, log_fn=log_fn)
 
 
 def main():
@@ -102,6 +104,10 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--method", default="pgm")
     ap.add_argument("--engine", default="scan", choices=["scan", "host"])
+    ap.add_argument("--resident-selection", action="store_true",
+                    help="PGM stage A as one jitted batch-scanned pass "
+                         "over the device-resident units (no host "
+                         "round-trip per selection round)")
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL, e.g. 2x4 (default: no mesh)")
     ap.add_argument("--subset", type=float, default=0.3)
@@ -132,6 +138,7 @@ def main():
                       val_matching=args.noise > 0,
                       use_sketch=not args.exact_gradients))
     h = launch_train(args.arch, tc, method=args.method, engine=args.engine,
+                     resident_selection=args.resident_selection,
                      mesh=parse_mesh(args.mesh), n=args.n, seq=args.seq,
                      noise=args.noise, ckpt_dir=args.ckpt,
                      resume=args.resume)

@@ -11,10 +11,18 @@ epochs are expressed as index+weight arrays gathered inside jit — no
 regenerated host batches — and validation is one vmapped call over the
 validation units.
 
-One compiled executable is reused for every epoch with the same step
-count (full epochs share one; subset epochs share another as long as the
-selection budget is stable), so steady-state epochs pay zero tracing or
-host-device transfer beyond the tiny plan arrays.
+Retrace-freedom (DESIGN.md §3): subset plans are padded with weight-0
+padding rows (unit id ``-1``) up to a *bucketed* step count — the next
+multiple of ``plan_granule`` (1/8 of the full-data step count) — so
+selection rounds whose ``n_selected`` lands in the same bucket reuse one
+compiled epoch executable, while a subset epoch still executes only
+~``n_selected/n_units`` of the full-epoch steps (padding waste is
+bounded by one granule, not by the subset fraction).  Padding rows are
+bit-exact no-ops: the gather index is clamped, the step runs, and
+``optim.gate_step`` selects the old ``(params, opt_state)`` leafwise, so
+the padded scan's state matches the unpadded loop's exactly.
+``n_epoch_traces`` counts compilations (it only advances while tracing)
+and is asserted on by ``tests/test_resident_selection.py``.
 """
 from __future__ import annotations
 
@@ -32,18 +40,29 @@ from repro.train.optim import clip_by_global_norm, make_update_for
 def make_step_core(bundle, cfg: TrainConfig):
     """The un-jitted per-batch SGD update shared by the legacy host loop
     (which jits it per call) and the scanned engine (which embeds it in
-    the scan body)."""
+    the scan body).
+
+    ``step_on`` (optional traced bool scalar) is the padding-batch gate:
+    when False the optimizer update is a bit-exact no-op and every metric
+    is zeroed (no state advance, no metric contribution); when ``None``
+    (host loop — plans it consumes are never padded) no gating ops are
+    emitted.
+    """
     _, opt_update = make_update_for(cfg)
 
-    def step(params, opt_state, batch, lr):
+    def step(params, opt_state, batch, lr, step_on=None):
         def loss(p):
             total, metrics = bundle.loss_fn(p, batch)
             return total, metrics
 
         (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
         grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
-        params, opt_state = opt_update(params, grads, opt_state, lr)
+        params, opt_state = opt_update(params, grads, opt_state, lr,
+                                       step_on=step_on)
         metrics = dict(metrics, grad_norm=gnorm)
+        if step_on is not None:
+            metrics = {k: jnp.where(step_on, v, jnp.zeros_like(v))
+                       for k, v in metrics.items()}
         return params, opt_state, metrics
 
     return step
@@ -52,12 +71,26 @@ def make_step_core(bundle, cfg: TrainConfig):
 class EpochEngine:
     """Scanned-epoch executor around a ModelBundle.
 
-    ``units`` (and optional ``val_units``) are moved to device once at
-    construction.  ``run_epoch`` consumes a batch plan and returns the
-    updated ``(params, opt_state)`` plus per-step losses; ``validate``
-    returns the mean per-unit validation loss.  Inputs to ``run_epoch``
-    are donated: the caller must treat the passed-in ``params`` /
-    ``opt_state`` as consumed and continue with the returned values.
+    Residency: ``units`` (and optional ``val_units``) are moved to device
+    once at construction and never leave — SGD epochs gather batches from
+    them inside jit, and PGM stage A can sketch them in place via
+    ``core/pgm.ResidentSelector`` (no host round-trip per selection
+    round).
+
+    Plans: ``full_plan`` / ``subset_plan`` return ``(batch_idx, batch_w)``
+    index/weight arrays of shape ``(n_steps, batch_units)``.  Both are
+    pure functions of ``(seed, epoch)`` (resume rebuilds them exactly).
+    Full plans always have ``steps_per_epoch_max = n_units //
+    batch_units`` steps; subset plans are padded with id ``-1`` /
+    weight ``0`` rows up to ``bucket_steps(live)`` — the next multiple
+    of ``plan_granule`` — so rounds with a stable selection budget
+    reuse one epoch executable regardless of the exact ``n_selected``,
+    at a padding overhead of at most one granule (1/8 epoch).
+
+    Donation contract: inputs to ``run_epoch`` are donated — the caller
+    must treat the passed-in ``params`` / ``opt_state`` buffers as
+    consumed and continue with the returned values (the scan carry
+    aliases them in place).
     """
 
     def __init__(self, bundle, cfg: TrainConfig,
@@ -72,21 +105,33 @@ class EpochEngine:
                           {k: jnp.asarray(v) for k, v in val_units.items()})
         self.n_units = int(jax.tree.leaves(self.units)[0].shape[0])
         self.unit_size = int(jax.tree.leaves(self.units)[0].shape[1])
+        #: full-data step count (upper bound for every plan shape)
+        self.steps_per_epoch_max = self.n_units // self.batch_units
+        #: bucket granule for padded subset plans (1/8 of a full epoch)
+        self.plan_granule = max(self.steps_per_epoch_max // 8, 1)
+        #: number of times the epoch executable has been traced/compiled
+        self.n_epoch_traces = 0
         step_core = make_step_core(bundle, cfg)
         unit_size = self.unit_size
 
         def run(params, opt_state, units_dev, batch_idx, batch_w, lr):
+            self.n_epoch_traces += 1  # python side effect: counts traces
+
             def body(carry, xs):
                 p, s = carry
                 idx, w = xs
+                # plan rows are wholly real or wholly padding; padding rows
+                # carry id -1 / weight 0 and must be bit-exact no-ops
+                live = idx[0] >= 0
+                gidx = jnp.maximum(idx, 0)
                 batch = {
-                    k: v[idx].reshape((-1,) + v.shape[2:])
+                    k: v[gidx].reshape((-1,) + v.shape[2:])
                     for k, v in units_dev.items()
                 }
                 if "weights" in batch:
                     batch = dict(batch, weights=batch["weights"]
                                  * jnp.repeat(w, unit_size))
-                p, s, metrics = step_core(p, s, batch, lr)
+                p, s, metrics = step_core(p, s, batch, lr, step_on=live)
                 return (p, s), metrics["loss"]
 
             (params, opt_state), losses = jax.lax.scan(
@@ -105,25 +150,64 @@ class EpochEngine:
 
     # ------------------------------------------------------------------
     def full_plan(self, epoch: int) -> Tuple[jax.Array, jax.Array]:
-        """(seed, epoch)-keyed full-data plan; unit weights are 1."""
+        """(seed, epoch)-keyed full-data plan; unit weights are 1.  Shape
+        ``(steps_per_epoch_max, batch_units)`` — identical to padded
+        subset plans, so full and subset epochs share one executable."""
         idx = epoch_plan(self.n_units, self.cfg.seed, epoch, self.batch_units)
         return jnp.asarray(idx), jnp.ones(idx.shape, jnp.float32)
 
-    def subset_plan(self, indices, weights,
-                    epoch: int) -> Tuple[jax.Array, jax.Array]:
+    def bucket_steps(self, n_live_steps: int) -> int:
+        """Round a live step count up to the next ``plan_granule``
+        multiple (capped at ``steps_per_epoch_max``): the padded-plan
+        shape that bounds both recompiles (≤8 distinct buckets ever; one
+        in the common stable-budget case) and padding waste (≤1
+        granule).  Never returns 0 — a selection with fewer live units
+        than a batch still yields a one-granule all-padding plan, keeping
+        the shape inside the bucket family instead of tracing a fresh
+        zero-length executable."""
+        g = self.plan_granule
+        return min(max(-(-n_live_steps // g) * g, g),
+                   self.steps_per_epoch_max)
+
+    def subset_plan(self, indices, weights, epoch: int,
+                    pad_to_steps: Optional[int] = None,
+                    ) -> Tuple[jax.Array, jax.Array]:
+        """(seed, epoch)-keyed weighted-subset plan.
+
+        By default the plan is padded with weight-0 rows to
+        ``bucket_steps(live)`` so changing ``n_selected`` between
+        selection rounds reuses the compiled epoch executable while a
+        subset epoch still runs only ~``n_selected`` steps' worth of
+        compute (pass ``pad_to_steps=0`` for the legacy unpadded shape,
+        or any explicit step count)."""
+        if pad_to_steps is None:
+            n_live = int((np.asarray(indices) >= 0).sum())
+            pad_to_steps = self.bucket_steps(n_live // self.batch_units)
         idx, w = subset_epoch_plan(np.asarray(indices), np.asarray(weights),
-                                   self.cfg.seed, epoch, self.batch_units)
+                                   self.cfg.seed, epoch, self.batch_units,
+                                   pad_to_steps=pad_to_steps or None)
         return jnp.asarray(idx), jnp.asarray(w)
+
+    @staticmethod
+    def plan_live_steps(plan: Tuple[jax.Array, jax.Array]) -> np.ndarray:
+        """Host-side mask of real (non-padding) steps in a plan — use it
+        to exclude padding rows from per-step metrics."""
+        return np.asarray(plan[0])[:, 0] >= 0
 
     def run_epoch(self, params, opt_state, lr,
                   plan: Tuple[jax.Array, jax.Array]):
-        """One scanned epoch.  Returns (params, opt_state, losses (n_steps,))
-        — the passed params/opt_state buffers are donated."""
+        """One scanned epoch.  Returns ``(params, opt_state, losses)``
+        with ``losses`` of shape ``(n_steps,)`` — padding steps report 0
+        and must be masked out of aggregates with ``plan_live_steps``.
+        The passed params/opt_state buffers are donated (see class
+        docstring)."""
         batch_idx, batch_w = plan
         return self._run(params, opt_state, self.units, batch_idx, batch_w,
                          jnp.asarray(lr, jnp.float32))
 
     def validate(self, params) -> float:
+        """Mean per-unit validation loss as one vmapped call (NaN when the
+        engine was built without ``val_units``)."""
         if self.val_units is None:
             return float("nan")
         return float(self._validate(params, self.val_units))

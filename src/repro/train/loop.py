@@ -13,6 +13,12 @@ Two execution engines share the selection/annealing/checkpoint logic:
   * ``engine="host"`` — the legacy per-batch host loop, kept as the
     parity oracle (tests/test_train_engine.py proves the two produce
     the same losses and selections).
+
+With ``resident_selection=True`` (and ``method="pgm"``) the selection
+rounds also stay on device: stage A runs as one jitted batch-scanned
+pass over the resident units via ``core/pgm.ResidentSelector`` instead
+of the sequential host-dispatched ``pgm_select`` path (docs/DESIGN.md
+§1).
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ from repro.configs.base import TrainConfig
 from repro.core import baselines as bl
 from repro.core.lastlayer import make_proj_for, units_gradients
 from repro.core.metrics import overlap_index
-from repro.core.pgm import Selection, pgm_select
+from repro.core.pgm import ResidentSelector, Selection, pgm_select
 from repro.data.pipeline import (
     full_iterator,
     subset_iterator,
@@ -62,11 +68,14 @@ def make_eval(bundle):
 
 
 def _select(method, bundle, params, units, tc: TrainConfig, key, proj,
-            val_units, durations, mesh=None, data_axis: str = "data"):
+            val_units, durations, mesh=None, data_axis: str = "data",
+            resident: Optional[ResidentSelector] = None):
     pc = tc.pgm
     n_units = jax.tree.leaves(units)[0].shape[0]
     budget = max(int(pc.subset_fraction * n_units), 1)
     if method == "pgm":
+        if resident is not None:
+            return resident(params, units, val_units=val_units)
         return pgm_select(bundle, params, units, pc, proj,
                           val_units=val_units, mesh=mesh, data_axis=data_axis)
     if method == "random":
@@ -101,6 +110,7 @@ def train_with_selection(
     ckpt_dir: Optional[str] = None,
     resume: bool = False,
     engine: str = "scan",           # scan (device-resident) | host (legacy)
+    resident_selection: bool = False,   # PGM stage A on the resident units
     mesh=None,                      # route PGM stage B via shard_map
     data_axis: str = "data",
     log_fn: Callable[[str], None] = lambda s: None,
@@ -127,6 +137,12 @@ def train_with_selection(
     durations = unit_durations(units)
     proj = make_proj_for(bundle, jax.random.fold_in(key, 17),
                          tc.pgm.sketch_dim_h, tc.pgm.sketch_dim_v)
+    # resident rounds: stage A is one jitted batch-scanned pass over the
+    # device-resident units; the selector caches its executable (and the
+    # projections, closed over the jit) across rounds
+    resident = (ResidentSelector(bundle, tc.pgm, proj, mesh=mesh,
+                                 data_axis=data_axis)
+                if resident_selection and method == "pgm" else None)
 
     hist = History()
     newbob = NewbobState(tc.lr)
@@ -159,7 +175,7 @@ def train_with_selection(
             sel_key = jax.random.fold_in(key, 1000 + epoch)
             new_sel = _select(method, bundle, params, units_dev, tc, sel_key,
                               proj, val_dev, durations, mesh=mesh,
-                              data_axis=data_axis)
+                              data_axis=data_axis, resident=resident)
             oi = (overlap_index(np.asarray(selection.indices),
                                 np.asarray(new_sel.indices))
                   if selection is not None else float("nan"))
@@ -178,17 +194,26 @@ def train_with_selection(
                    f"units (OI={oi:.3f})")
 
         # --- epoch of SGD ---
-        if use_full:
-            hist.cost_units += 1.0
-        else:
-            hist.cost_units += float(int(selection.n_selected)) / n_units
         if scan_engine is not None:
             plan = (scan_engine.full_plan(epoch) if use_full else
                     scan_engine.subset_plan(selection.indices,
                                             selection.weights, epoch))
+            # charge what the padded scan actually executes (bucketed step
+            # count — padding rows run a full step before being gated), so
+            # cost_units stays an honest compute measure
+            hist.cost_units += (plan[0].shape[0]
+                                / scan_engine.steps_per_epoch_max)
+        elif use_full:
+            hist.cost_units += 1.0
+        else:
+            hist.cost_units += float(int(selection.n_selected)) / n_units
+        if scan_engine is not None:
             params, opt_state, step_losses = scan_engine.run_epoch(
                 params, opt_state, newbob.lr, plan)
-            losses = np.asarray(step_losses, np.float64)
+            # subset plans are padded to a fixed shape for retrace-freedom;
+            # weight-0 padding steps must not contribute to the epoch mean
+            live = scan_engine.plan_live_steps(plan)
+            losses = np.asarray(step_losses, np.float64)[live]
             train_loss = float(losses.mean()) if losses.size else float("nan")
         else:
             it = (full_iterator(units, tc.seed, epoch, batch_units)

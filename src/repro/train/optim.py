@@ -93,10 +93,32 @@ def make_optimizer(name: str):
     raise ValueError(name)
 
 
+def gate_step(step_on, new_tree, old_tree):
+    """Padding-aware step semantics: select ``new_tree`` where ``step_on``
+    (a traced boolean scalar) and ``old_tree`` otherwise, leafwise.
+
+    A weight-0 padding batch (see ``data/pipeline.subset_epoch_plan``'s
+    ``pad_to_steps``) must advance *nothing*: no parameter update, no step
+    counter tick, no Adam moment decay.  ``jnp.where`` on a scalar predicate
+    lowers to a select, so a gated-off step returns the old buffers
+    bit-identically — padded and unpadded epochs produce the same
+    ``(params, opt_state)``.
+    """
+    return jax.tree.map(lambda a, b: jnp.where(step_on, a, b),
+                        new_tree, old_tree)
+
+
 def make_update_for(cfg):
     """Bind a TrainConfig's optimizer hyper-parameters once, so the host
     loop and the scanned epoch engine share one (init, update) pair:
-    ``init(params) -> state``; ``update(params, grads, state, lr)``."""
+    ``init(params) -> state``; ``update(params, grads, state, lr[, step_on])``.
+
+    ``step_on`` (optional traced bool scalar) implements the weight-0
+    padding-batch semantics of retrace-free subset plans: when False the
+    update is a bit-exact no-op for both params and optimizer state
+    (``gate_step``); when ``None`` (the host loop, real batches) no gating
+    ops are emitted at all.
+    """
     init, update = make_optimizer(cfg.optimizer)
     kw = {"momentum": cfg.momentum} if cfg.optimizer == "sgd" else {}
 
@@ -104,9 +126,13 @@ def make_update_for(cfg):
         return init(params, cfg.momentum) if cfg.optimizer == "sgd" \
             else init(params)
 
-    def update_fn(params, grads, state, lr):
-        return update(params, grads, state, lr,
-                      weight_decay=cfg.weight_decay, **kw)
+    def update_fn(params, grads, state, lr, step_on=None):
+        new_p, new_s = update(params, grads, state, lr,
+                              weight_decay=cfg.weight_decay, **kw)
+        if step_on is None:
+            return new_p, new_s
+        return gate_step(step_on, new_p, params), \
+            gate_step(step_on, new_s, state)
 
     return init_fn, update_fn
 

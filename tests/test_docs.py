@@ -1,0 +1,87 @@
+"""Docs integrity (fast tier; also ``make docs-check``): every file path
+referenced in README.md / docs/DESIGN.md / ROADMAP.md must exist, every
+``make <target>`` named in those docs must be defined in the Makefile,
+and every ``DESIGN.md §N`` citation in the source tree must resolve to a
+section of docs/DESIGN.md (the reference style used across ``src/``)."""
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = ["README.md", "docs/DESIGN.md", "ROADMAP.md"]
+
+# directories a doc-relative reference may be rooted at
+ROOTS = ["", "src/", "src/repro/", "docs/"]
+EXTS = (".py", ".md", ".json", ".ini", ".txt", ".yaml", ".toml")
+# backtick tokens containing these are code/CLI snippets, not paths
+NON_PATH_CHARS = set(" ()<>{}*=,|§\"'")
+
+
+def _path_tokens(text: str):
+    """Path-like tokens from inline-backtick spans: keep `a/b.py`-style
+    references, drop identifiers, CLI flags and code snippets."""
+    for tok in re.findall(r"`([^`\n]+)`", text):
+        tok = tok.split(":")[0].rstrip("/")          # strip :member anchors
+        if not tok or tok.startswith("-") or set(tok) & NON_PATH_CHARS:
+            continue
+        if "/" in tok or tok.endswith(EXTS):
+            yield tok
+
+
+def _resolves(tok: str) -> bool:
+    cands = {tok}
+    # module-attr form `pkg/mod.attr` -> pkg/mod.py
+    base, dot, _ = tok.rpartition(".")
+    if dot and "/" in tok and not tok.endswith(EXTS):
+        cands |= {base, base + ".py"}
+    for cand in cands:
+        for root in ROOTS:
+            if (REPO / root / cand).exists():
+                return True
+    # bare filename cited without its directory (e.g. `ref.py`)
+    if "/" not in tok and tok.endswith(EXTS):
+        return any(REPO.rglob(tok))
+    return False
+
+
+def _make_targets():
+    text = (REPO / "Makefile").read_text()
+    return set(re.findall(r"^([A-Za-z0-9_.-]+):", text, flags=re.M))
+
+
+def test_doc_file_references_exist():
+    missing = []
+    for doc in DOCS:
+        text = (REPO / doc).read_text()
+        for tok in _path_tokens(text):
+            if not _resolves(tok):
+                missing.append(f"{doc}: `{tok}`")
+    assert not missing, "dangling file references:\n" + "\n".join(missing)
+
+
+def test_doc_make_targets_are_defined():
+    targets = _make_targets()
+    missing = []
+    for doc in DOCS:
+        text = (REPO / doc).read_text()
+        for t in re.findall(r"\bmake ([a-z][a-z0-9_-]*)", text):
+            if t not in targets:
+                missing.append(f"{doc}: make {t}")
+    assert not missing, "undefined make targets:\n" + "\n".join(missing)
+
+
+def test_design_section_citations_resolve():
+    """`DESIGN.md §N` citations across the tree (including the
+    core/pgm.py §5 distribution citation) must name a real section."""
+    design = (REPO / "docs/DESIGN.md").read_text()
+    sections = set(re.findall(r"§(\w+)", design))
+    assert sections >= {"1", "2", "3", "4", "5", "6", "7"}
+    bad = []
+    for py in list(REPO.glob("src/**/*.py")) + list(REPO.glob("tests/*.py")) \
+            + list(REPO.glob("benchmarks/*.py")):
+        for n in re.findall(r"DESIGN\.md §(\w+)", py.read_text()):
+            if n not in sections:
+                bad.append(f"{py.relative_to(REPO)}: §{n}")
+    assert not bad, "dangling DESIGN.md § citations:\n" + "\n".join(bad)
+    # the historically-dangling citation must specifically resolve now
+    pgm = (REPO / "src/repro/core/pgm.py").read_text()
+    assert "DESIGN.md §5" in pgm and "5" in sections

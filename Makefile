@@ -4,20 +4,29 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all bench docs-check
+.PHONY: test-fast test-all bench bench-sharded docs-check
 
 # fast tier: everything not marked slow (< ~2 min) — the development loop
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
-# tier-1 verify: the full suite, fail-fast (what the CI gate runs)
+# tier-1 verify: the full suite, fail-fast (what the CI gate runs).
+# The forced host-device count makes the in-process mesh paths (and the
+# sharded-epoch parity tests, which also force it in their own
+# subprocesses) exercised under multiple devices.
 test-all:
-	$(PY) -m pytest -x -q
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+	    $(PY) -m pytest -x -q
 
-# paper tables + kernel micro-benchmarks + train-loop / selection-round
-# benchmarks (writes BENCH_*.json at the repo root)
+# paper tables + kernel micro-benchmarks + train-loop / selection-round /
+# sharded-epoch benchmarks (writes BENCH_*.json at the repo root)
 bench:
 	$(PY) -m benchmarks.run
+
+# just the sharded/chunked epoch benchmark (4-device subprocess;
+# writes BENCH_sharded_epoch.json)
+bench-sharded:
+	$(PY) -m benchmarks.bench_sharded_epoch
 
 # docs integrity: no dangling file refs / make targets / DESIGN.md § cites
 docs-check:

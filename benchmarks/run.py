@@ -3,8 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV — one row per measured cell, one
 section per paper table/figure (benchmarks/tables.py), plus kernel
 micro-benchmarks, the train-loop engine benchmark and the
-selection-round benchmark (also written to ``BENCH_train_loop.json`` /
-``BENCH_selection_round.json`` at the repo root so PRs can track the
+selection-round/sharded-epoch benchmarks (also written to
+``BENCH_train_loop.json`` / ``BENCH_selection_round.json`` /
+``BENCH_sharded_epoch.json`` at the repo root so PRs can track the
 trajectory) and (when dry-run artifacts exist) the roofline table.
 REPRO_BENCH_SCALE=micro|small scales corpus/epoch counts.
 """
@@ -70,6 +71,15 @@ def main() -> None:
                    "steps_per_s", "_steps_per_s", "scan_over_host_speedup")
     run_json_bench(_bench_selection_round, "BENCH_selection_round.json",
                    "round_ms", "_round_ms", "resident_over_host_speedup")
+
+    # sharded/chunked epoch benchmark (4-device subprocess; writes its
+    # own BENCH_sharded_epoch.json since it carries two speedup keys)
+    try:
+        from benchmarks.bench_sharded_epoch import bench_sharded_epoch
+        for r in bench_sharded_epoch():
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    except Exception as e:
+        print(f"bench_sharded_epoch,0,ERROR={type(e).__name__}:{e}")
 
     # roofline table from dry-run artifacts, if the sweep has run
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",

@@ -17,9 +17,11 @@ equivalent of the paper's "one GM per GPU".
 
 Residency (docs/DESIGN.md §1): ``ResidentSelector`` runs stage A as one
 jitted batch-scanned pass over the epoch engine's device-resident unit
-buffers, with the sketch projections closed over the jit so both the
-executable and the projection constants are reused across selection
-rounds — no per-round host round-trip.
+buffers — the very same buffers the engine trains from, including their
+``data``-axis sharding when the engine was built on a mesh — with the
+sketch projections closed over the jit so both the executable and the
+projection constants are reused across selection rounds: no per-round
+host round-trip, and no second copy of the corpus.
 """
 from __future__ import annotations
 

@@ -1,0 +1,95 @@
+"""Async host-side plan generation (DESIGN.md §1 step 4).
+
+Epoch plans are tiny ``(seed, epoch)``-keyed index/weight arrays built
+with numpy on the host (``data/pipeline.epoch_plan`` /
+``subset_epoch_plan`` behind ``EpochEngine.full_plan`` /
+``subset_plan``).  Building them synchronously between epoch dispatches
+puts that (cheap but serial) host work — plus its ``device_put`` — on
+the critical path.  ``PlanPrefetcher`` double-buffers upcoming plans on
+a single worker thread so they build and transfer while the current
+epoch chunk executes on device.
+
+Determinism is free: plan builders are pure functions of
+``(seed, epoch, selection)``, so a prefetched plan is bit-identical to
+one built synchronously, and a resumed run — which starts with an empty
+prefetch buffer — rebuilds exactly the plans the interrupted run would
+have used (asserted by ``tests/test_sharded_engine.py``).
+
+Keys are caller-chosen hashables (the training loop uses
+``("full", epoch)`` / ``("subset", selection_round, epoch)``): a new
+selection round changes the key, so a superseded plan can never be
+served.  A key that will no longer be fetched still occupies a buffer
+slot, so callers that re-key (the loop, after each selection round)
+should call ``invalidate()`` to drop pending work — otherwise orphans
+accumulate until the buffer is permanently full.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, Hashable
+
+
+class PlanPrefetcher:
+    """Single-worker double buffer for plan construction.
+
+    ``schedule(key, build)`` submits ``build`` (no-arg, returns the plan
+    — typically already ``device_put``) to the worker thread; at most
+    ``max_pending`` submissions are outstanding so a long horizon cannot
+    pile up host memory.  ``get(key, build)`` returns the prefetched
+    result when ``key`` was scheduled, else falls back to calling
+    ``build`` synchronously — the two paths return identical values
+    because builders are pure.
+    """
+
+    def __init__(self, max_pending: int = 2):
+        self.max_pending = int(max_pending)
+        self._pending: Dict[Hashable, Future] = {}
+        self._ex = ThreadPoolExecutor(max_workers=1,
+                                      thread_name_prefix="plan-prefetch")
+        self._closed = False
+        #: observability: get() calls served from the buffer / built
+        #: synchronously (used by tests and the benchmark harness)
+        self.hits = 0
+        self.misses = 0
+
+    def schedule(self, key: Hashable, build: Callable[[], object]) -> bool:
+        """Queue ``build`` for ``key``.  Idempotent: an already-scheduled
+        key reports True (so a caller topping up a look-ahead window can
+        keep walking forward past keys it queued earlier); returns False
+        only when closed or the buffer is full."""
+        if key in self._pending:
+            return True
+        if self._closed or len(self._pending) >= self.max_pending:
+            return False
+        self._pending[key] = self._ex.submit(build)
+        return True
+
+    def get(self, key: Hashable, build: Callable[[], object]):
+        """The plan for ``key`` — from the buffer when prefetched
+        (propagating any builder exception), else built synchronously."""
+        fut = self._pending.pop(key, None)
+        if fut is None:
+            self.misses += 1
+            return build()
+        self.hits += 1
+        return fut.result()
+
+    def invalidate(self):
+        """Drop every pending entry (cancelling what hasn't started):
+        call when the keys change — e.g. a new selection round — so
+        superseded plans don't pin buffer slots or device memory."""
+        for fut in self._pending.values():
+            fut.cancel()
+        self._pending.clear()
+
+    def close(self):
+        """Cancel anything not yet running and release the worker."""
+        self._closed = True
+        self.invalidate()
+        self._ex.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

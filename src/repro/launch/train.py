@@ -2,24 +2,33 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b-smoke
       --method pgm --epochs 6 [--engine scan|host] [--mesh 2x4]
-      [--resident-selection] [--ckpt DIR] [--resume] [--noise 0.2]
+      [--epoch-chunk 4] [--resident-selection] [--ckpt DIR] [--resume]
+      [--noise 0.2 --snr-db 5]
 
 ``launch_train`` is the programmatic entry point the examples and
-benchmarks share.  With ``--mesh DATAxMODEL`` the selection units are
-device_put sharded over ``data`` (the scanned epoch engine preserves
-placement, so its gathers/updates partition under GSPMD) and PGM stage B
-routes through ``pgm_select_sharded`` — the same code path on 1 and N
-devices.  On CPU without a mesh it runs the smoke-scale loop for
-development and CI.
+benchmarks share.  With ``--mesh DATAxMODEL`` the *whole* training run
+is mesh-native (DESIGN.md §5): the scanned epoch engine device_puts the
+selection units sharded over ``data``, compiles the epoch scan with
+FSDP/TP param shardings from ``sharding/specs.py`` and data-sharded
+batches, and PGM selection (stage A GSPMD, stage B
+``pgm_select_sharded``) reuses the same sharded unit buffers — one code
+path on 1 and N devices.  ``--epoch-chunk N`` folds N bucketed epochs
+into one dispatch with on-device validation/newbob, and plan prefetch
+overlaps host-side plan generation with the running chunk.  On CPU
+without a mesh it runs the smoke-scale loop for development and CI.
+
+``--noise``/``--snr-db`` inject the paper's robustness setting into the
+synthetic corpora: a ``noise`` fraction of training utterances gets
+additive feature noise at ``snr_db`` (ASR) or corrupted labels (LM),
+and validation matching (``Val=True``) turns on automatically so PGM
+selects against the clean validation gradient.
 """
 from __future__ import annotations
 
 import argparse
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.base import PGMConfig, TrainConfig
@@ -39,28 +48,18 @@ def parse_mesh(spec: Optional[str]):
     return jax.make_mesh(dims, ("data", "model"))
 
 
-def shard_units(units: Dict[str, np.ndarray], mesh,
-                data_axis: str = "data") -> Dict:
-    """Place units on the mesh sharded over ``data_axis`` along the
-    leading (n_units) dim when divisible; replicated otherwise."""
-    if mesh is None:
-        return units
-    n = units[next(iter(units))].shape[0]
-    ax = data_axis if n % mesh.shape[data_axis] == 0 else None
-    return {k: jax.device_put(
-                v, NamedSharding(mesh, P(ax, *([None] * (v.ndim - 1)))))
-            for k, v in units.items()}
-
-
 def make_units_for(cfg, *, n: int, seq: int, noise: float, seed: int = 0,
-                   unit_size: int = 4):
+                   unit_size: int = 4, snr_db: float = 10.0):
     """(train units, val units) for the arch family — RNN-T gets the ASR
-    corpus, everything else the LM corpus."""
+    corpus, everything else the LM corpus.  ``noise`` corrupts that
+    fraction of *training* examples (additive feature noise at
+    ``snr_db`` for ASR, label corruption for LM); validation stays
+    clean, as in the paper's robustness setting."""
     if cfg.family == "rnnt":
         r = cfg.rnnt
         corpus = make_asr_corpus(seed, n, n_feats=r.n_feats,
                                  vocab_size=r.vocab_size,
-                                 noise_fraction=noise)
+                                 noise_fraction=noise, snr_db=snr_db)
         vc = make_asr_corpus(seed + 7, max(n // 4, 8), n_feats=r.n_feats,
                              vocab_size=r.vocab_size)
         return asr_units(corpus, unit_size), asr_units(vc, unit_size)
@@ -79,9 +78,13 @@ def launch_train(
     resident_selection: bool = False,
     mesh=None,
     data_axis: str = "data",
+    spec_mode: str = "tp",
+    epoch_chunk: int = 1,
+    plan_prefetch: bool = True,
     n: int = 96,
     seq: int = 24,
     noise: float = 0.0,
+    snr_db: float = 10.0,
     batch_units: int = 1,
     ckpt_dir: Optional[str] = None,
     resume: bool = False,
@@ -89,14 +92,15 @@ def launch_train(
 ) -> History:
     cfg = get_config(arch)
     bundle = build_model(cfg)
-    units, val = make_units_for(cfg, n=n, seq=seq, noise=noise, seed=tc.seed)
-    units = shard_units(units, mesh, data_axis)
-    val = shard_units(val, mesh, data_axis)
+    units, val = make_units_for(cfg, n=n, seq=seq, noise=noise,
+                                seed=tc.seed, snr_db=snr_db)
+    # unit placement (data-sharded on a mesh) is owned by the engine
     return train_with_selection(
         bundle, units, tc, method=method, val_units=val,
         batch_units=batch_units, ckpt_dir=ckpt_dir, resume=resume,
         engine=engine, resident_selection=resident_selection, mesh=mesh,
-        data_axis=data_axis, log_fn=log_fn)
+        data_axis=data_axis, spec_mode=spec_mode, epoch_chunk=epoch_chunk,
+        plan_prefetch=plan_prefetch, log_fn=log_fn)
 
 
 def main():
@@ -109,7 +113,19 @@ def main():
                          "over the device-resident units (no host "
                          "round-trip per selection round)")
     ap.add_argument("--mesh", default=None,
-                    help="DATAxMODEL, e.g. 2x4 (default: no mesh)")
+                    help="DATAxMODEL, e.g. 2x4 (default: no mesh); shards "
+                         "the epoch engine, units and selection")
+    ap.add_argument("--spec-mode", default="tp",
+                    choices=["tp", "fsdp_sp", "fsdp_batch"],
+                    help="SpecBuilder param-sharding policy for the "
+                         "training carry (DESIGN.md §5)")
+    ap.add_argument("--epoch-chunk", type=int, default=1,
+                    help="fold up to N epochs into one scan dispatch "
+                         "(on-device validation/newbob; metrics fetched "
+                         "once per chunk)")
+    ap.add_argument("--no-plan-prefetch", action="store_true",
+                    help="build epoch plans synchronously instead of on "
+                         "the prefetch thread")
     ap.add_argument("--subset", type=float, default=0.3)
     ap.add_argument("--partitions", type=int, default=4)
     ap.add_argument("--select-every", type=int, default=5)
@@ -119,7 +135,13 @@ def main():
     ap.add_argument("--seq", type=int, default=24)
     ap.add_argument("--lr", type=float, default=0.5)
     ap.add_argument("--optimizer", default="sgd")
-    ap.add_argument("--noise", type=float, default=0.0)
+    ap.add_argument("--noise", type=float, default=0.0,
+                    help="fraction of corrupted training examples "
+                         "(feature noise for ASR, label noise for LM)")
+    ap.add_argument("--snr-db", type=float, default=10.0,
+                    help="SNR of the injected ASR feature noise (dB); "
+                         "only meaningful with --noise > 0 on an RNN-T "
+                         "arch")
     ap.add_argument("--exact-gradients", action="store_true",
                     help="paper-faithful exact last-layer gradients "
                          "(no sketching)")
@@ -139,8 +161,11 @@ def main():
                       use_sketch=not args.exact_gradients))
     h = launch_train(args.arch, tc, method=args.method, engine=args.engine,
                      resident_selection=args.resident_selection,
-                     mesh=parse_mesh(args.mesh), n=args.n, seq=args.seq,
-                     noise=args.noise, ckpt_dir=args.ckpt,
+                     mesh=parse_mesh(args.mesh), spec_mode=args.spec_mode,
+                     epoch_chunk=args.epoch_chunk,
+                     plan_prefetch=not args.no_plan_prefetch,
+                     n=args.n, seq=args.seq, noise=args.noise,
+                     snr_db=args.snr_db, ckpt_dir=args.ckpt,
                      resume=args.resume)
     if h.val_loss:
         print(f"done: val {h.val_loss[-1]:.4f}, "

@@ -33,8 +33,13 @@ def _flatten(tree, prefix="") -> Dict[str, Any]:
     return {jax.tree_util.keystr(path): leaf for path, leaf in flat}, treedef
 
 
-def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None):
-    """Blocking atomic save."""
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
+         mesh_shape: Optional[Dict[str, int]] = None):
+    """Blocking atomic save.  ``mesh_shape`` (``{axis: size}`` or None
+    for single-device) is recorded in the manifest so a restore can
+    report/reshard across mesh-topology changes (DESIGN.md §5); arrays
+    are always stored as full host arrays, so restore onto any mesh is
+    a plain ``device_put`` with the new shardings."""
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f".tmp_{step}")
     final = os.path.join(ckpt_dir, f"step_{step}")
@@ -49,6 +54,7 @@ def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None):
     manifest = {
         "step": int(step),
         "time": time.time(),
+        "mesh_shape": mesh_shape,
         "arrays": {k: {"shape": list(np.shape(v)),
                        "dtype": str(np.asarray(v).dtype),
                        "sha256": hashlib.sha256(
@@ -134,20 +140,22 @@ class AsyncCheckpointer:
             item = self._q.get()
             if item is None:
                 return
-            step, host_tree, extra = item
+            step, host_tree, extra, mesh_shape = item
             try:
-                save(self.ckpt_dir, step, host_tree, extra)
+                save(self.ckpt_dir, step, host_tree, extra,
+                     mesh_shape=mesh_shape)
             except BaseException as e:          # surfaced on next submit/wait
                 self._err = e
             finally:
                 self._q.task_done()
 
-    def submit(self, step: int, tree, extra: Optional[Dict] = None):
+    def submit(self, step: int, tree, extra: Optional[Dict] = None,
+               mesh_shape: Optional[Dict[str, int]] = None):
         if self._err:
             raise self._err
         host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)),
                                  tree)
-        self._q.put((step, host_tree, extra))
+        self._q.put((step, host_tree, extra, mesh_shape))
 
     def wait(self):
         self._q.join()

@@ -1,15 +1,32 @@
-"""Device-resident scanned epoch engine for Algorithm 1's SGD phase.
+"""Device-resident scanned epoch engines for Algorithm 1's SGD phase.
 
-The legacy host loop assembles every batch in numpy, copies it to device
-and dispatches one jit call per step, then validates one example per
-Python iteration.  Here the whole corpus of selection units lives on
-device once; an epoch is a single jitted ``lax.scan`` over a precomputed
-(seed, epoch)-keyed batch plan (``data/pipeline.epoch_plan`` /
-``subset_epoch_plan``), with ``(params, opt_state)`` donated so the
-update runs in-place instead of round-tripping buffers.  Weighted-subset
-epochs are expressed as index+weight arrays gathered inside jit — no
-regenerated host batches — and validation is one vmapped call over the
-validation units.
+Three execution paths live behind one engine interface (``make_engine``,
+consumed by ``train/loop.py``):
+
+  * ``HostEngine`` (``engine="host"``) — the legacy per-batch loop: one
+    jit call per host-assembled batch, one eval call per validation
+    unit.  Kept as the parity oracle.
+  * ``EpochEngine`` (``engine="scan"``) — the whole corpus of selection
+    units lives on device once; an epoch is a single jitted ``lax.scan``
+    over a precomputed (seed, epoch)-keyed batch plan
+    (``data/pipeline.epoch_plan`` / ``subset_epoch_plan``), with
+    ``(params, opt_state)`` donated so the update runs in-place.
+    Weighted-subset epochs are expressed as index+weight arrays gathered
+    inside jit; validation is one vmapped call over the validation
+    units.
+  * ``EpochEngine`` with a ``mesh`` — the *same* scanned epoch compiled
+    mesh-natively (DESIGN.md §5): the donated ``(params, opt_state)``
+    carry is constrained to ``sharding/specs.py:SpecBuilder`` FSDP/TP
+    partition specs, units/batches are sharded over the ``data`` axis,
+    and GSPMD inserts the mean-psum of grads/metrics across ``data``
+    that the per-shard loss terms require — one code path on 1 and N
+    devices, parity-tested by ``tests/test_sharded_engine.py``.
+
+Multi-epoch chunks: ``run_epochs`` folds several bucketed epochs into
+one dispatch — an outer ``lax.scan`` over per-epoch plans whose body
+runs the epoch, the vmapped validation, and the newbob lr update
+entirely on device, so metrics come back to the host once per chunk and
+selection rounds are the only host sync points.
 
 Retrace-freedom (DESIGN.md §3): subset plans are padded with weight-0
 padding rows (unit id ``-1``) up to a *bucketed* step count — the next
@@ -21,16 +38,18 @@ bounded by one granule, not by the subset fraction).  Padding rows are
 bit-exact no-ops: the gather index is clamped, the step runs, and
 ``optim.gate_step`` selects the old ``(params, opt_state)`` leafwise, so
 the padded scan's state matches the unpadded loop's exactly.
-``n_epoch_traces`` counts compilations (it only advances while tracing)
-and is asserted on by ``tests/test_resident_selection.py``.
+``n_epoch_traces`` counts compilations of both the per-epoch and the
+chunked executable (it only advances while tracing) and is asserted on
+by ``tests/test_resident_selection.py`` / ``tests/test_sharded_engine.py``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import TrainConfig
 from repro.data.pipeline import epoch_plan, subset_epoch_plan
@@ -39,7 +58,7 @@ from repro.train.optim import clip_by_global_norm, make_update_for
 
 def make_step_core(bundle, cfg: TrainConfig):
     """The un-jitted per-batch SGD update shared by the legacy host loop
-    (which jits it per call) and the scanned engine (which embeds it in
+    (which jits it per call) and the scanned engines (which embed it in
     the scan body).
 
     ``step_on`` (optional traced bool scalar) is the padding-batch gate:
@@ -68,6 +87,24 @@ def make_step_core(bundle, cfg: TrainConfig):
     return step
 
 
+def newbob_step(lr, prev_loss, val_loss, anneal_factor, threshold):
+    """Device-side newbob update (the traced twin of
+    ``optim.NewbobState.update``): anneal ``lr`` by ``anneal_factor``
+    when the relative validation improvement over ``prev_loss`` drops
+    below ``threshold``.  ``prev_loss = inf`` (first epoch) and a NaN
+    ``val_loss`` (no validation set) both leave ``lr`` untouched, like
+    the host version."""
+    rel = (prev_loss - val_loss) / jnp.maximum(jnp.abs(prev_loss), 1e-9)
+    anneal = (prev_loss != jnp.inf) & (rel < threshold)
+    return jnp.where(anneal, lr * anneal_factor, lr), val_loss
+
+
+def plan_live_steps(plan) -> np.ndarray:
+    """Host-side mask of real (non-padding) steps in a plan — use it to
+    exclude padding rows from per-step metric aggregates."""
+    return np.asarray(plan[0])[:, 0] >= 0
+
+
 class EpochEngine:
     """Scanned-epoch executor around a ModelBundle.
 
@@ -77,76 +114,202 @@ class EpochEngine:
     ``core/pgm.ResidentSelector`` (no host round-trip per selection
     round).
 
+    Mesh (DESIGN.md §5): with ``mesh`` the engine owns placement and
+    compilation for N devices — units and validation units are
+    ``device_put`` sharded over ``data_axis`` along their leading
+    ``n_units`` dim (when divisible), the donated ``(params, opt_state)``
+    carry is constrained to ``SpecBuilder`` FSDP/TP partition specs
+    (``spec_mode`` selects the policy), gathered batches are constrained
+    to shard their example axis over ``data``, and plan arrays shard
+    their ``batch_units`` axis over ``data``.  GSPMD then partitions the
+    step: per-shard loss/grad terms are combined with a mean-psum over
+    ``data``, exactly the collective an explicit
+    ``train/compress.py:compressed_psum`` emits on the slow ``pod`` axis
+    of a multi-pod mesh.  Callers bring the carry onto the mesh with
+    ``shard_state`` (fresh init) or ``restore_sharding`` (checkpoint
+    restore).  Without a mesh the emitted jaxpr is identical to the
+    single-device engine.
+
     Plans: ``full_plan`` / ``subset_plan`` return ``(batch_idx, batch_w)``
     index/weight arrays of shape ``(n_steps, batch_units)``.  Both are
-    pure functions of ``(seed, epoch)`` (resume rebuilds them exactly).
-    Full plans always have ``steps_per_epoch_max = n_units //
-    batch_units`` steps; subset plans are padded with id ``-1`` /
-    weight ``0`` rows up to ``bucket_steps(live)`` — the next multiple
-    of ``plan_granule`` — so rounds with a stable selection budget
-    reuse one epoch executable regardless of the exact ``n_selected``,
-    at a padding overhead of at most one granule (1/8 epoch).
+    pure functions of ``(seed, epoch)`` (resume rebuilds them exactly —
+    which also makes them safe to build ahead of time on a prefetch
+    thread, see ``data/plan_prefetch.py``).  Full plans always have
+    ``steps_per_epoch_max = n_units // batch_units`` steps; subset plans
+    are padded with id ``-1`` / weight ``0`` rows up to
+    ``bucket_steps(live)`` — the next multiple of ``plan_granule`` — so
+    rounds with a stable selection budget reuse one epoch executable
+    regardless of the exact ``n_selected``, at a padding overhead of at
+    most one granule (1/8 epoch).
 
-    Donation contract: inputs to ``run_epoch`` are donated — the caller
-    must treat the passed-in ``params`` / ``opt_state`` buffers as
-    consumed and continue with the returned values (the scan carry
-    aliases them in place).
+    Donation contract: inputs to ``run_epoch`` / ``run_epochs`` are
+    donated — the caller must treat the passed-in ``params`` /
+    ``opt_state`` buffers as consumed and continue with the returned
+    values (the scan carry aliases them in place).
     """
+
+    kind = "scan"
 
     def __init__(self, bundle, cfg: TrainConfig,
                  units: Dict[str, Any],
                  val_units: Optional[Dict[str, Any]] = None,
-                 batch_units: int = 1):
+                 batch_units: int = 1,
+                 mesh=None, data_axis: str = "data",
+                 spec_mode: str = "tp"):
         self.bundle = bundle
         self.cfg = cfg
         self.batch_units = int(batch_units)
-        self.units = {k: jnp.asarray(v) for k, v in units.items()}
-        self.val_units = (None if val_units is None else
-                          {k: jnp.asarray(v) for k, v in val_units.items()})
+        self.mesh = mesh
+        self.data_axis = data_axis
+        if mesh is not None:
+            from repro.sharding.specs import SpecBuilder
+            self.spec: Optional[Any] = SpecBuilder(mesh, mode=spec_mode)
+        else:
+            self.spec = None
+        self.units = self._place_units(units)
+        self.val_units = (None if val_units is None
+                          else self._place_units(val_units))
         self.n_units = int(jax.tree.leaves(self.units)[0].shape[0])
         self.unit_size = int(jax.tree.leaves(self.units)[0].shape[1])
         #: full-data step count (upper bound for every plan shape)
         self.steps_per_epoch_max = self.n_units // self.batch_units
         #: bucket granule for padded subset plans (1/8 of a full epoch)
         self.plan_granule = max(self.steps_per_epoch_max // 8, 1)
-        #: number of times the epoch executable has been traced/compiled
+        #: number of times an epoch executable (per-epoch or chunked)
+        #: has been traced/compiled
         self.n_epoch_traces = 0
         step_core = make_step_core(bundle, cfg)
         unit_size = self.unit_size
 
-        def run(params, opt_state, units_dev, batch_idx, batch_w, lr):
-            self.n_epoch_traces += 1  # python side effect: counts traces
-
+        def make_body(lr):
             def body(carry, xs):
                 p, s = carry
                 idx, w = xs
-                # plan rows are wholly real or wholly padding; padding rows
-                # carry id -1 / weight 0 and must be bit-exact no-ops
+                # plan rows are wholly real or wholly padding; padding
+                # rows carry id -1 / weight 0 and must be bit-exact no-ops
                 live = idx[0] >= 0
                 gidx = jnp.maximum(idx, 0)
                 batch = {
                     k: v[gidx].reshape((-1,) + v.shape[2:])
-                    for k, v in units_dev.items()
+                    for k, v in self.units.items()
                 }
+                batch = self._constrain_batch(batch)
                 if "weights" in batch:
                     batch = dict(batch, weights=batch["weights"]
                                  * jnp.repeat(w, unit_size))
                 p, s, metrics = step_core(p, s, batch, lr, step_on=live)
                 return (p, s), metrics["loss"]
 
+            return body
+
+        def run(params, opt_state, batch_idx, batch_w, lr):
+            self.n_epoch_traces += 1  # python side effect: counts traces
+            params, opt_state = self._constrain_state(params, opt_state)
             (params, opt_state), losses = jax.lax.scan(
-                body, (params, opt_state), (batch_idx, batch_w))
+                make_body(lr), (params, opt_state), (batch_idx, batch_w))
             return params, opt_state, losses
 
         # donate (params, opt_state): the scan carry re-uses their buffers
         self._run = jax.jit(run, donate_argnums=(0, 1))
 
-        def validate(params, val_dev):
+        def val_mean(params, val_dev):
             per_unit = jax.vmap(
                 lambda u: bundle.per_example_loss(params, u).mean())(val_dev)
             return per_unit.mean()
 
-        self._validate = jax.jit(validate)
+        self._validate = jax.jit(val_mean)
+
+        def run_chunk(params, opt_state, val_dev, batch_idx, batch_w,
+                      lr, prev_loss):
+            """batch_idx/batch_w: (n_epochs, n_steps, batch_units).  The
+            whole chunk — epochs, validations, newbob updates — is one
+            dispatch; metrics are accumulated in the scan ys and fetched
+            once by the caller."""
+            self.n_epoch_traces += 1
+            params, opt_state = self._constrain_state(params, opt_state)
+
+            def epoch(carry, xs):
+                p, s, lr_c, prev = carry
+                idx, w = xs
+                (p, s), losses = jax.lax.scan(make_body(lr_c), (p, s),
+                                              (idx, w))
+                if val_dev is not None:
+                    vl = val_mean(p, val_dev)
+                    lr_n, prev = newbob_step(
+                        lr_c, prev, vl, cfg.anneal_factor,
+                        cfg.improvement_threshold)
+                else:
+                    vl = jnp.float32(jnp.nan)
+                    lr_n = lr_c
+                return (p, s, lr_n, prev), (losses, vl, lr_n)
+
+            (params, opt_state, lr, prev_loss), (losses, vls, lrs) = \
+                jax.lax.scan(epoch, (params, opt_state, lr, prev_loss),
+                             (batch_idx, batch_w))
+            return params, opt_state, losses, vls, lrs, lr, prev_loss
+
+        self._run_chunk = jax.jit(run_chunk, donate_argnums=(0, 1))
+
+    # -- mesh placement helpers ----------------------------------------
+    def _place_units(self, units):
+        place = _data_sharded_put(self.mesh, self.data_axis)
+        return {k: place(jnp.asarray(v)) for k, v in units.items()}
+
+    def _constrain_batch(self, batch):
+        """Shard the gathered batch's example axis over ``data`` (when
+        divisible) — the step's per-shard loss/grad terms then reduce
+        with a GSPMD mean-psum across the axis."""
+        if self.mesh is None:
+            return batch
+        size = self.mesh.shape[self.data_axis]
+
+        def con(v):
+            ax = self.data_axis if v.shape[0] % size == 0 else None
+            return jax.lax.with_sharding_constraint(
+                v, NamedSharding(self.mesh,
+                                 P(ax, *([None] * (v.ndim - 1)))))
+
+        return {k: con(v) for k, v in batch.items()}
+
+    def _constrain_state(self, params, opt_state):
+        """Pin the donated carry to the SpecBuilder FSDP/TP specs so the
+        whole scan (and its outputs, via donation) keeps them."""
+        if self.mesh is None:
+            return params, opt_state
+        con = lambda t: jax.lax.with_sharding_constraint(
+            t, self.state_shardings(t))
+        return con(params), con(opt_state)
+
+    def state_shardings(self, tree):
+        """NamedShardings for a params-shaped tree (optimizer states
+        mirror the params tree, so the same key-path rules apply)."""
+        return self.spec.to_shardings(self.spec.param_specs(tree))
+
+    def shard_state(self, params, opt_state):
+        """Bring a freshly-initialized carry onto the mesh with the
+        engine's FSDP/TP shardings (identity without a mesh)."""
+        if self.mesh is None:
+            return params, opt_state
+        return (jax.device_put(params, self.state_shardings(params)),
+                jax.device_put(opt_state, self.state_shardings(opt_state)))
+
+    def restore_sharding(self, path: str, arr):
+        """``checkpoint.restore(sharding_fn=...)`` hook: reshard a
+        restored leaf onto this engine's mesh — elastic restore across
+        mesh shapes (DESIGN.md §5).  Returns None without a mesh."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh,
+                             self.spec.param_spec(path, np.shape(arr)))
+
+    def _put_plan(self, idx, w):
+        idx, w = jnp.asarray(idx), jnp.asarray(w)
+        if self.mesh is not None and \
+                idx.shape[-1] % self.mesh.shape[self.data_axis] == 0:
+            spec = P(*([None] * (idx.ndim - 1)), self.data_axis)
+            sh = NamedSharding(self.mesh, spec)
+            idx, w = jax.device_put(idx, sh), jax.device_put(w, sh)
+        return idx, w
 
     # ------------------------------------------------------------------
     def full_plan(self, epoch: int) -> Tuple[jax.Array, jax.Array]:
@@ -154,7 +317,7 @@ class EpochEngine:
         ``(steps_per_epoch_max, batch_units)`` — identical to padded
         subset plans, so full and subset epochs share one executable."""
         idx = epoch_plan(self.n_units, self.cfg.seed, epoch, self.batch_units)
-        return jnp.asarray(idx), jnp.ones(idx.shape, jnp.float32)
+        return self._put_plan(idx, np.ones(idx.shape, np.float32))
 
     def bucket_steps(self, n_live_steps: int) -> int:
         """Round a live step count up to the next ``plan_granule``
@@ -186,13 +349,17 @@ class EpochEngine:
         idx, w = subset_epoch_plan(np.asarray(indices), np.asarray(weights),
                                    self.cfg.seed, epoch, self.batch_units,
                                    pad_to_steps=pad_to_steps or None)
-        return jnp.asarray(idx), jnp.asarray(w)
+        return self._put_plan(idx, w)
 
-    @staticmethod
-    def plan_live_steps(plan: Tuple[jax.Array, jax.Array]) -> np.ndarray:
-        """Host-side mask of real (non-padding) steps in a plan — use it
-        to exclude padding rows from per-step metrics."""
-        return np.asarray(plan[0])[:, 0] >= 0
+    plan_live_steps = staticmethod(plan_live_steps)
+
+    def epoch_cost(self, plan, use_full: bool = False,
+                   n_selected: Optional[int] = None) -> float:
+        """Full-epoch-equivalent compute charged for executing ``plan``:
+        the bucketed step count — padding rows run a full step before
+        being gated — so reported savings include the granule slack
+        honestly (DESIGN.md §3)."""
+        return plan[0].shape[0] / self.steps_per_epoch_max
 
     def run_epoch(self, params, opt_state, lr,
                   plan: Tuple[jax.Array, jax.Array]):
@@ -202,8 +369,36 @@ class EpochEngine:
         The passed params/opt_state buffers are donated (see class
         docstring)."""
         batch_idx, batch_w = plan
-        return self._run(params, opt_state, self.units, batch_idx, batch_w,
+        return self._run(params, opt_state, batch_idx, batch_w,
                          jnp.asarray(lr, jnp.float32))
+
+    def run_epochs(self, params, opt_state, lr, prev_loss,
+                   plans: Sequence[Tuple[jax.Array, jax.Array]]):
+        """A chunk of epochs as ONE dispatch (outer scan over per-epoch
+        plans; inner scan over steps; validation + newbob on device).
+
+        ``plans`` must share one shape (all full plans do; subset plans
+        within one selection period land in one bucket).  Returns
+        ``(params, opt_state, losses (E, n_steps), val_losses (E,),
+        lrs (E,), lr_out, prev_loss_out)`` — ``lrs[i]`` is the
+        post-update lr after epoch ``i`` (what the host
+        ``NewbobState.update`` would have produced), ``val_losses`` is
+        NaN-filled when the engine has no ``val_units``.  Metrics cross
+        the host boundary once per chunk, when the caller fetches them.
+        Inputs are donated like ``run_epoch``."""
+        shapes = {tuple(p[0].shape) for p in plans}
+        if len(shapes) != 1:
+            raise ValueError(f"chunked plans must share one shape, got "
+                             f"{sorted(shapes)}")
+        # plans arrive already device_put (full_plan/subset_plan, often on
+        # the prefetch thread) with their batch axis data-sharded; the
+        # stack preserves placement, so no second transfer is needed
+        batch_idx = jnp.stack([p[0] for p in plans])
+        batch_w = jnp.stack([p[1] for p in plans])
+        return self._run_chunk(params, opt_state, self.val_units,
+                               batch_idx, batch_w,
+                               jnp.asarray(lr, jnp.float32),
+                               jnp.asarray(prev_loss, jnp.float32))
 
     def validate(self, params) -> float:
         """Mean per-unit validation loss as one vmapped call (NaN when the
@@ -211,3 +406,125 @@ class EpochEngine:
         if self.val_units is None:
             return float("nan")
         return float(self._validate(params, self.val_units))
+
+
+class HostEngine:
+    """The legacy per-batch host loop behind the same engine interface —
+    the parity oracle (`tests/test_train_engine.py`): one jit call per
+    host-assembled batch, one eval call per validation unit.  Plans are
+    the unpadded ``(seed, epoch)``-keyed schedules, so batch order is
+    byte-identical to the scanned engine's by construction (DESIGN.md
+    §1).  With a mesh, only the *selection* units are sharded (the SGD
+    step itself stays single-device — sharded training is the scan
+    engine's job)."""
+
+    kind = "host"
+
+    def __init__(self, bundle, cfg: TrainConfig,
+                 units: Dict[str, Any],
+                 val_units: Optional[Dict[str, Any]] = None,
+                 batch_units: int = 1,
+                 mesh=None, data_axis: str = "data",
+                 spec_mode: str = "tp"):
+        self.bundle = bundle
+        self.cfg = cfg
+        self.batch_units = int(batch_units)
+        self.mesh = mesh
+        self.units_host = {k: np.asarray(v) for k, v in units.items()}
+        place = _data_sharded_put(mesh, data_axis)
+        self.units = {k: place(v) for k, v in self.units_host.items()}
+        self.val_units = (None if val_units is None else
+                          {k: place(np.asarray(v))
+                           for k, v in val_units.items()})
+        self.n_units = int(self.units_host[next(iter(units))].shape[0])
+        self.unit_size = int(self.units_host[next(iter(units))].shape[1])
+        self.steps_per_epoch_max = self.n_units // self.batch_units
+        self._step = jax.jit(make_step_core(bundle, cfg))
+        self._eval = jax.jit(
+            lambda params, batch: bundle.per_example_loss(params,
+                                                          batch).mean())
+
+    # -- unified interface ---------------------------------------------
+    def full_plan(self, epoch: int):
+        idx = epoch_plan(self.n_units, self.cfg.seed, epoch, self.batch_units)
+        return idx, np.ones(idx.shape, np.float32)
+
+    def subset_plan(self, indices, weights, epoch: int):
+        """Unpadded — the host loop executes exactly the live steps."""
+        return subset_epoch_plan(np.asarray(indices), np.asarray(weights),
+                                 self.cfg.seed, epoch, self.batch_units)
+
+    plan_live_steps = staticmethod(plan_live_steps)
+
+    def epoch_cost(self, plan, use_full: bool = False,
+                   n_selected: Optional[int] = None) -> float:
+        """Paper-style charge: the fraction of units trained on (the
+        host loop executes exactly the live steps; the dropped
+        remainder of a subset is still charged, matching the paper's
+        `b_k / n` accounting)."""
+        if use_full or n_selected is None:
+            return 1.0
+        return float(n_selected) / self.n_units
+
+    def shard_state(self, params, opt_state):
+        return params, opt_state
+
+    def restore_sharding(self, path: str, arr):
+        return None
+
+    def run_epoch(self, params, opt_state, lr, plan):
+        """Per-batch host loop over the plan rows — assembles every batch
+        in numpy (the same view `full_iterator`/`subset_iterator` yield)
+        and dispatches one jit call per step."""
+        losses = []
+        for sel, w in zip(*plan):
+            batch = {k: v[sel].reshape((-1,) + v.shape[2:])
+                     for k, v in self.units_host.items()}
+            if "weights" in batch:
+                batch = dict(batch, weights=batch["weights"]
+                             * np.repeat(w, self.unit_size))
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = self._step(params, opt_state,
+                                                    batch, lr)
+            losses.append(float(metrics["loss"]))
+        return params, opt_state, np.asarray(losses, np.float64)
+
+    def validate(self, params) -> float:
+        if self.val_units is None:
+            return float("nan")
+        n_val = int(jax.tree.leaves(self.val_units)[0].shape[0])
+        return float(np.mean([
+            float(self._eval(params,
+                             {k: v[i] for k, v in self.val_units.items()}))
+            for i in range(n_val)]))
+
+
+def _data_sharded_put(mesh, data_axis: str):
+    """Leading-axis ``data`` placement for unit trees (replicated when
+    the dim doesn't divide; plain device arrays without a mesh)."""
+    if mesh is None:
+        return jnp.asarray
+    size = mesh.shape[data_axis]
+
+    def put(v):
+        ax = data_axis if v.shape[0] % size == 0 else None
+        return jax.device_put(v, NamedSharding(
+            mesh, P(ax, *([None] * (np.ndim(v) - 1)))))
+
+    return put
+
+
+def make_engine(name: str, bundle, cfg: TrainConfig, units,
+                val_units=None, batch_units: int = 1, mesh=None,
+                data_axis: str = "data", spec_mode: str = "tp"):
+    """The one engine factory ``train/loop.py`` consumes: ``"host"`` |
+    ``"scan"`` (mesh-native when ``mesh`` is given)."""
+    if name == "scan":
+        return EpochEngine(bundle, cfg, units, val_units=val_units,
+                           batch_units=batch_units, mesh=mesh,
+                           data_axis=data_axis, spec_mode=spec_mode)
+    if name == "host":
+        return HostEngine(bundle, cfg, units, val_units=val_units,
+                          batch_units=batch_units, mesh=mesh,
+                          data_axis=data_axis, spec_mode=spec_mode)
+    raise ValueError(f"unknown engine {name!r}")

@@ -4,21 +4,34 @@ ModelBundle: warm-start on full data, re-selection every R epochs
 annealing on validation loss, checkpoint/resume, and cost accounting
 (the basis of the paper's speedup numbers).
 
-Two execution engines share the selection/annealing/checkpoint logic:
+Execution is delegated to one engine interface
+(``train/engine.py:make_engine``) with selection/annealing/checkpoint
+logic shared above it:
 
   * ``engine="scan"`` (default) — the device-resident scanned epoch
-    engine (train/engine.py): units live on device, each epoch is one
-    donated jit(lax.scan) over a precomputed batch plan, validation is
-    one vmapped call;
+    engine: units live on device, each epoch is one donated
+    jit(lax.scan) over a precomputed batch plan, validation is one
+    vmapped call.  With ``mesh`` the same executable compiles
+    mesh-natively (FSDP/TP carry, data-sharded batches/units,
+    DESIGN.md §5).
   * ``engine="host"`` — the legacy per-batch host loop, kept as the
     parity oracle (tests/test_train_engine.py proves the two produce
     the same losses and selections).
 
+``epoch_chunk > 1`` folds up to that many consecutive epochs into one
+``run_epochs`` dispatch (scan engine only): validation and the newbob
+update run on device inside the chunk and metrics are fetched once per
+chunk, so selection rounds (and checkpoint writes, once per chunk) are
+the only host sync points.  ``plan_prefetch`` (default on for the scan
+engine) builds the next plans on a host worker thread
+(``data/plan_prefetch.py``) while the current dispatch runs.
+
 With ``resident_selection=True`` (and ``method="pgm"``) the selection
 rounds also stay on device: stage A runs as one jitted batch-scanned
-pass over the resident units via ``core/pgm.ResidentSelector`` instead
-of the sequential host-dispatched ``pgm_select`` path (docs/DESIGN.md
-§1).
+pass over the engine's resident units — sharded over ``data`` when the
+engine placed them on a mesh — via ``core/pgm.ResidentSelector``
+instead of the sequential host-dispatched ``pgm_select`` path
+(docs/DESIGN.md §1).
 """
 from __future__ import annotations
 
@@ -35,13 +48,10 @@ from repro.core import baselines as bl
 from repro.core.lastlayer import make_proj_for, units_gradients
 from repro.core.metrics import overlap_index
 from repro.core.pgm import ResidentSelector, Selection, pgm_select
-from repro.data.pipeline import (
-    full_iterator,
-    subset_iterator,
-    unit_durations,
-)
+from repro.data.pipeline import unit_durations
+from repro.data.plan_prefetch import PlanPrefetcher
 from repro.train import checkpoint as ckpt_mod
-from repro.train.engine import EpochEngine, make_step_core
+from repro.train.engine import EpochEngine, make_engine, make_step_core
 from repro.train.optim import NewbobState, make_update_for
 
 
@@ -111,35 +121,32 @@ def train_with_selection(
     resume: bool = False,
     engine: str = "scan",           # scan (device-resident) | host (legacy)
     resident_selection: bool = False,   # PGM stage A on the resident units
-    mesh=None,                      # route PGM stage B via shard_map
+    mesh=None,                      # shard training + selection on a mesh
     data_axis: str = "data",
+    spec_mode: str = "tp",          # SpecBuilder param-sharding policy
+    epoch_chunk: int = 1,           # epochs folded into one scan dispatch
+    plan_prefetch: bool = True,     # build next plans on a host thread
     log_fn: Callable[[str], None] = lambda s: None,
 ) -> History:
-    if engine not in ("scan", "host"):
-        raise ValueError(f"unknown engine {engine!r}")
+    eng = make_engine(engine, bundle, tc, units, val_units=val_units,
+                      batch_units=batch_units, mesh=mesh,
+                      data_axis=data_axis, spec_mode=spec_mode)
+    is_scan = isinstance(eng, EpochEngine)
     key = jax.random.PRNGKey(tc.seed) if key is None else key
     params = bundle.init_params(key)
     opt_init, _ = make_update_for(tc)
     opt_state = opt_init(params)
-    scan_engine: Optional[EpochEngine] = None
-    if engine == "scan":
-        scan_engine = EpochEngine(bundle, tc, units, val_units=val_units,
-                                  batch_units=batch_units)
-        units_dev = scan_engine.units
-        val_dev = scan_engine.val_units
-        step_fn = eval_fn = None
-    else:
-        step_fn = make_train_step(bundle, tc)
-        eval_fn = make_eval(bundle)
-        units_dev = {k: jnp.asarray(v) for k, v in units.items()}
-        val_dev = (None if val_units is None
-                   else {k: jnp.asarray(v) for k, v in val_units.items()})
-    durations = unit_durations(units)
+    # bring the donated carry onto the mesh (identity without one)
+    params, opt_state = eng.shard_state(params, opt_state)
+    units_dev = eng.units
+    val_dev = eng.val_units
+    durations = unit_durations({k: np.asarray(v) for k, v in units.items()})
     proj = make_proj_for(bundle, jax.random.fold_in(key, 17),
                          tc.pgm.sketch_dim_h, tc.pgm.sketch_dim_v)
     # resident rounds: stage A is one jitted batch-scanned pass over the
-    # device-resident units; the selector caches its executable (and the
-    # projections, closed over the jit) across rounds
+    # device-resident units (data-sharded with a mesh); the selector
+    # caches its executable (and the projections, closed over the jit)
+    # across rounds
     resident = (ResidentSelector(bundle, tc.pgm, proj, mesh=mesh,
                                  data_axis=data_axis)
                 if resident_selection and method == "pgm" else None)
@@ -148,9 +155,12 @@ def train_with_selection(
     newbob = NewbobState(tc.lr)
     selection: Optional[Selection] = None
     start_epoch = 0
+    mesh_shape = (dict(zip(mesh.axis_names, mesh.devices.shape))
+                  if mesh is not None else None)
     if resume and ckpt_dir and ckpt_mod.latest_step(ckpt_dir) is not None:
         tmpl = {"params": params, "opt": opt_state}
-        loaded, manifest = ckpt_mod.restore(ckpt_dir, template=tmpl)
+        loaded, manifest = ckpt_mod.restore(
+            ckpt_dir, template=tmpl, sharding_fn=eng.restore_sharding)
         params, opt_state = loaded["params"], loaded["opt"]
         start_epoch = manifest["extra"]["epoch"] + 1
         newbob = NewbobState(manifest["extra"]["lr"],
@@ -162,101 +172,165 @@ def train_with_selection(
                 jnp.asarray(manifest["extra"]["sel_weights"], jnp.float32),
                 jnp.asarray(sum(1 for i in sel_idx if i >= 0)),
                 jnp.zeros((1,)))
+        saved_mesh = manifest.get("mesh_shape")
+        if saved_mesh != mesh_shape:
+            log_fn(f"resharded checkpoint (saved mesh {saved_mesh} -> "
+                   f"current {mesh_shape})")
         log_fn(f"resumed at epoch {start_epoch}")
 
+    warm = tc.pgm.warm_start_epochs
+    R = tc.pgm.select_every
+    prefetcher = (PlanPrefetcher(max_pending=max(2, epoch_chunk))
+                  if plan_prefetch and is_scan else None)
+    sel_round = 0          # prefetch key component: one per selection
+
+    def _use_full(e: int) -> bool:
+        return method == "full" or e < warm
+
+    def _is_sel_epoch(e: int) -> bool:
+        return not _use_full(e) and (e - warm) % R == 0
+
+    def _plan_builder(e: int, sel: Optional[Selection]):
+        if _use_full(e):
+            return lambda: eng.full_plan(e)
+        idx, w = sel.indices, sel.weights
+        return lambda: eng.subset_plan(idx, w, e)
+
+    def _plan_key(e: int, rnd: int):
+        return ("full", e) if _use_full(e) else ("subset", rnd, e)
+
+    def _get_plan(e: int):
+        build = _plan_builder(e, selection)
+        if prefetcher is None:
+            return build()
+        return prefetcher.get(_plan_key(e, sel_round), build)
+
     t0 = time.time()
-    n_units = jax.tree.leaves(units_dev)[0].shape[0]
-    for epoch in range(start_epoch, tc.epochs):
-        use_full = method == "full" or epoch < tc.pgm.warm_start_epochs
-        # --- selection round ---
-        if not use_full and (
-                selection is None
-                or (epoch - tc.pgm.warm_start_epochs) % tc.pgm.select_every == 0):
-            sel_key = jax.random.fold_in(key, 1000 + epoch)
-            new_sel = _select(method, bundle, params, units_dev, tc, sel_key,
-                              proj, val_dev, durations, mesh=mesh,
-                              data_axis=data_axis, resident=resident)
-            oi = (overlap_index(np.asarray(selection.indices),
-                                np.asarray(new_sel.indices))
-                  if selection is not None else float("nan"))
-            selection = new_sel
-            # selection cost: one grad-rep pass over all units ~ 1/3 epoch
-            sel_cost = (1.0 / 3.0 if method in ("pgm", "gradmatch_pb")
-                        else 0.0)
-            hist.cost_units += sel_cost
-            hist.selections.append({
-                "epoch": epoch,
-                "indices": np.asarray(selection.indices).tolist(),
-                "weights": np.asarray(selection.weights).tolist(),
-                "overlap_index": oi,
-            })
-            log_fn(f"epoch {epoch}: selected {int(selection.n_selected)} "
-                   f"units (OI={oi:.3f})")
+    try:
+        epoch = start_epoch
+        while epoch < tc.epochs:
+            use_full = _use_full(epoch)
+            # --- selection round (the host sync point) ---
+            if not use_full and (selection is None or _is_sel_epoch(epoch)):
+                sel_key = jax.random.fold_in(key, 1000 + epoch)
+                new_sel = _select(method, bundle, params, units_dev, tc,
+                                  sel_key, proj, val_dev, durations,
+                                  mesh=mesh, data_axis=data_axis,
+                                  resident=resident)
+                oi = (overlap_index(np.asarray(selection.indices),
+                                    np.asarray(new_sel.indices))
+                      if selection is not None else float("nan"))
+                selection = new_sel
+                sel_round += 1
+                if prefetcher is not None:
+                    # keys change with the selection round: drop any
+                    # pending plans so they can't pin buffer slots
+                    prefetcher.invalidate()
+                # selection cost: one grad-rep pass over all units ~ 1/3
+                # epoch
+                sel_cost = (1.0 / 3.0 if method in ("pgm", "gradmatch_pb")
+                            else 0.0)
+                hist.cost_units += sel_cost
+                hist.selections.append({
+                    "epoch": epoch,
+                    "indices": np.asarray(selection.indices).tolist(),
+                    "weights": np.asarray(selection.weights).tolist(),
+                    "overlap_index": oi,
+                })
+                log_fn(f"epoch {epoch}: selected "
+                       f"{int(selection.n_selected)} units (OI={oi:.3f})")
 
-        # --- epoch of SGD ---
-        if scan_engine is not None:
-            plan = (scan_engine.full_plan(epoch) if use_full else
-                    scan_engine.subset_plan(selection.indices,
-                                            selection.weights, epoch))
-            # charge what the padded scan actually executes (bucketed step
-            # count — padding rows run a full step before being gated), so
-            # cost_units stays an honest compute measure
-            hist.cost_units += (plan[0].shape[0]
-                                / scan_engine.steps_per_epoch_max)
-        elif use_full:
-            hist.cost_units += 1.0
-        else:
-            hist.cost_units += float(int(selection.n_selected)) / n_units
-        if scan_engine is not None:
-            params, opt_state, step_losses = scan_engine.run_epoch(
-                params, opt_state, newbob.lr, plan)
-            # subset plans are padded to a fixed shape for retrace-freedom;
-            # weight-0 padding steps must not contribute to the epoch mean
-            live = scan_engine.plan_live_steps(plan)
-            losses = np.asarray(step_losses, np.float64)[live]
-            train_loss = float(losses.mean()) if losses.size else float("nan")
-        else:
-            it = (full_iterator(units, tc.seed, epoch, batch_units)
-                  if use_full else
-                  subset_iterator(units, np.asarray(selection.indices),
-                                  np.asarray(selection.weights),
-                                  tc.seed, epoch, batch_units))
-            losses = []
-            for batch in it:
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                                     newbob.lr)
-                losses.append(float(metrics["loss"]))
-            train_loss = float(np.mean(losses)) if losses else float("nan")
-
-        # --- validation + newbob ---
-        if val_dev is not None:
-            if scan_engine is not None:
-                vl = scan_engine.validate(params)
+            # --- chunk of SGD epochs sharing this selection context ---
+            if method == "full":
+                boundary = tc.epochs
+            elif epoch < warm:
+                boundary = warm
             else:
-                vl = float(np.mean([
-                    float(eval_fn(params,
-                                  {k: v[i] for k, v in val_dev.items()}))
-                    for i in range(jax.tree.leaves(val_dev)[0].shape[0])]))
-            newbob = newbob.update(vl, tc.anneal_factor,
-                                   tc.improvement_threshold)
-        else:
-            vl = float("nan")
-        hist.train_loss.append(train_loss)
-        hist.val_loss.append(vl)
-        hist.lr.append(newbob.lr)
-        log_fn(f"epoch {epoch}: train {train_loss:.4f} val {vl:.4f} "
-               f"lr {newbob.lr:.4f}")
+                boundary = warm + ((epoch - warm) // R + 1) * R
+            boundary = min(boundary, tc.epochs)
+            chunk = (max(1, min(epoch_chunk, boundary - epoch))
+                     if is_scan else 1)
+            chunk_epochs = list(range(epoch, epoch + chunk))
+            plans = [_get_plan(e) for e in chunk_epochs]
+            # overlap the next dispatch: every later epoch whose selection
+            # context is already decided (same selection, or a full plan)
+            # can be built on the prefetch thread right now
+            if prefetcher is not None:
+                e_next = epoch + chunk
+                while e_next < tc.epochs and not _is_sel_epoch(e_next):
+                    if not prefetcher.schedule(
+                            _plan_key(e_next, sel_round),
+                            _plan_builder(e_next, selection)):
+                        break
+                    e_next += 1
 
-        if ckpt_dir:
-            extra = {"epoch": epoch, "lr": newbob.lr,
-                     "prev_loss": newbob.prev_loss,
-                     "sel_indices": (np.asarray(selection.indices).tolist()
-                                     if selection is not None else None),
-                     "sel_weights": (np.asarray(selection.weights).tolist()
-                                     if selection is not None else None)}
-            ckpt_mod.save(ckpt_dir, epoch,
-                          {"params": params, "opt": opt_state}, extra)
+            n_sel = (int(selection.n_selected)
+                     if selection is not None else None)
+            for p in plans:
+                hist.cost_units += eng.epoch_cost(p, use_full=use_full,
+                                                  n_selected=n_sel)
+            if epoch_chunk == 1 or not is_scan:
+                # per-epoch dispatch: validate + newbob on host (legacy
+                # numerics — the parity-oracle path).  Keyed off the
+                # *requested* chunk size, not this chunk's length, so a
+                # chunked run uses one newbob implementation (the fp32
+                # device one) everywhere — the anneal schedule stays a
+                # pure function of the config even when boundaries leave
+                # size-1 chunks
+                params, opt_state, step_losses = eng.run_epoch(
+                    params, opt_state, newbob.lr, plans[0])
+                live = eng.plan_live_steps(plans[0])
+                losses = np.asarray(step_losses, np.float64)[live]
+                train_losses = [float(losses.mean()) if losses.size
+                                else float("nan")]
+                if val_dev is not None:
+                    vl = eng.validate(params)
+                    newbob = newbob.update(vl, tc.anneal_factor,
+                                           tc.improvement_threshold)
+                else:
+                    vl = float("nan")
+                val_losses, lrs = [vl], [newbob.lr]
+            else:
+                # chunked dispatch: epochs, validations and newbob updates
+                # all on device; one host fetch for the whole chunk
+                (params, opt_state, step_losses, vls, lrs_dev, lr_out,
+                 prev_out) = eng.run_epochs(params, opt_state, newbob.lr,
+                                            newbob.prev_loss, plans)
+                step_losses = np.asarray(step_losses, np.float64)
+                train_losses = []
+                for i, p in enumerate(plans):
+                    live = eng.plan_live_steps(p)
+                    l = step_losses[i][live]
+                    train_losses.append(float(l.mean()) if l.size
+                                        else float("nan"))
+                val_losses = [float(v) for v in np.asarray(vls)]
+                lrs = [float(v) for v in np.asarray(lrs_dev)]
+                newbob = NewbobState(float(lr_out), float(prev_out))
+
+            for e, tl, vl, lr in zip(chunk_epochs, train_losses,
+                                     val_losses, lrs):
+                hist.train_loss.append(tl)
+                hist.val_loss.append(vl)
+                hist.lr.append(lr)
+                log_fn(f"epoch {e}: train {tl:.4f} val {vl:.4f} "
+                       f"lr {lr:.4f}")
+
+            if ckpt_dir:
+                extra = {"epoch": chunk_epochs[-1], "lr": newbob.lr,
+                         "prev_loss": newbob.prev_loss,
+                         "sel_indices": (np.asarray(
+                             selection.indices).tolist()
+                             if selection is not None else None),
+                         "sel_weights": (np.asarray(
+                             selection.weights).tolist()
+                             if selection is not None else None)}
+                ckpt_mod.save(ckpt_dir, chunk_epochs[-1],
+                              {"params": params, "opt": opt_state}, extra,
+                              mesh_shape=mesh_shape)
+            epoch += chunk
+    finally:
+        if prefetcher is not None:
+            prefetcher.close()
 
     hist.wall_time = time.time() - t0
     hist.final_params = params

@@ -4,7 +4,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all bench bench-sharded docs-check
+.PHONY: test-fast test-all bench bench-sharded bench-rnnt docs-check
 
 # fast tier: everything not marked slow (< ~2 min) — the development loop
 test-fast:
@@ -27,6 +27,11 @@ bench:
 # writes BENCH_sharded_epoch.json)
 bench-sharded:
 	$(PY) -m benchmarks.bench_sharded_epoch
+
+# just the RNN-T loss path benchmark: dense vs fused, fwd + grad
+# steps/sec and compiled peak temp memory (writes BENCH_rnnt_loss.json)
+bench-rnnt:
+	$(PY) -m benchmarks.bench_rnnt_loss
 
 # docs integrity: no dangling file refs / make targets / DESIGN.md § cites
 docs-check:

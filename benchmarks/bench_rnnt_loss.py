@@ -1,0 +1,127 @@
+"""RNN-T loss benchmark: dense (materialized joint + autodiff) vs fused
+(custom_vjp alpha/beta lattice, vocab-streamed joint), forward and grad
+step, at the largest smoke-ish shape that fits both paths on CPU.
+
+Two kinds of numbers (DESIGN.md §7):
+
+* wall-clock steps/sec — interleaved round-by-round, headline best-of
+  per variant, speedup as the *median of per-round ratios* (shared
+  containers drift ±30%);
+* compiled peak temp memory from ``.memory_analysis()`` — deterministic,
+  no interleaving needed.  The fused grad step must stay below one
+  ``(B, T, U+1, V)`` joint tensor; the dense one cannot.
+
+Writes ``BENCH_rnnt_loss.json`` at the repo root (like the other
+BENCH_* trajectory artifacts).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Largest-smoke loss shape: smoke-vocab-scale head on realistic lattice
+# extents.  The dense grad step peaks at ~5x the 35 MB joint tensor here;
+# the fused one stays in the hundreds of KB.
+B, T, U, J, V = 8, 64, 16, 64, 1000
+
+
+def _setup():
+    from repro.core.rnnt_loss import rnnt_loss_from_logits, rnnt_loss_fused
+    rng = np.random.default_rng(0)
+    ze = jnp.asarray(rng.normal(size=(B, T, J)), jnp.float32)
+    zp = jnp.asarray(rng.normal(size=(B, U + 1, J)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(J, V)) * 0.3, jnp.float32)
+    labels = jnp.asarray(rng.integers(1, V, (B, U)), jnp.int32)
+    t_lens = jnp.full((B,), T, jnp.int32)
+    u_lens = jnp.full((B,), U, jnp.int32)
+
+    def dense(ze, zp, w):
+        logits = jnp.tanh(ze[:, :, None, :] + zp[:, None, :, :]) @ w
+        return rnnt_loss_from_logits(logits, labels, t_lens, u_lens).sum()
+
+    def fused(ze, zp, w):
+        return rnnt_loss_fused(ze, zp, w, labels, t_lens, u_lens,
+                               lattice_impl="ref").sum()
+
+    fns = {}
+    for name, loss in (("dense", dense), ("fused", fused)):
+        fns[name + "_fwd"] = jax.jit(loss)
+        fns[name + "_grad"] = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+    return fns, (ze, zp, w)
+
+
+def _temp_bytes(fn, args) -> int:
+    return int(fn.lower(*args).compile().memory_analysis()
+               .temp_size_in_bytes)
+
+
+def _time_one(fn, args, repeats: int) -> float:
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return repeats / (time.time() - t0)          # calls/sec
+
+
+def bench_rnnt_loss(rounds: int = 5, repeats: int = 3,
+                    write_json: bool = True) -> List[Dict]:
+    fns, args = _setup()
+    for f in fns.values():                       # compile outside timing
+        jax.block_until_ready(f(*args))
+
+    # interleaved rounds: every variant samples each round's machine state
+    rates: Dict[str, List[float]] = {k: [] for k in fns}
+    for _ in range(rounds):
+        for k, f in fns.items():
+            rates[k].append(_time_one(f, args, repeats))
+
+    mem = {k: _temp_bytes(fns[k], args)
+           for k in ("dense_grad", "fused_grad")}
+    joint_bytes = 4 * B * T * (U + 1) * V
+
+    rows = []
+    record = {"time": time.time(),
+              "shape": f"B{B}xT{T}xU{U}xJ{J}xV{V}",
+              "joint_tensor_bytes": joint_bytes}
+    for k in fns:
+        best = max(rates[k])
+        rows.append({"name": f"rnnt_loss/{k}", "us_per_call": 1e6 / best,
+                     "derived": f"steps_per_s={best:.1f}",
+                     "steps_per_s": best})
+        record[k + "_steps_per_s"] = round(best, 2)
+    for kind in ("fwd", "grad"):
+        sp = float(np.median([f / d for d, f in
+                              zip(rates[f"dense_{kind}"],
+                                  rates[f"fused_{kind}"])]))
+        rows.append({"name": f"rnnt_loss/{kind}_speedup",
+                     "us_per_call": 0.0,
+                     "derived": f"fused_over_dense={sp:.2f}x",
+                     "steps_per_s": 0.0, "speedup": sp})
+        record[f"fused_over_dense_{kind}_speedup"] = round(sp, 3)
+    for k, v in mem.items():
+        rows.append({"name": f"rnnt_loss/{k}_temp_mem",
+                     "us_per_call": 0.0,
+                     "derived": f"temp_bytes={v}"
+                                f" ({v / joint_bytes:.2f}x joint)",
+                     "steps_per_s": 0.0})
+        record[k + "_temp_bytes"] = v
+
+    if write_json:
+        out = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_rnnt_loss.json")
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    for r in bench_rnnt_loss():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

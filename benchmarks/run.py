@@ -3,10 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV — one row per measured cell, one
 section per paper table/figure (benchmarks/tables.py), plus kernel
 micro-benchmarks, the train-loop engine benchmark and the
-selection-round/sharded-epoch benchmarks (also written to
+selection-round/rnnt-loss/sharded-epoch benchmarks (also written to
 ``BENCH_train_loop.json`` / ``BENCH_selection_round.json`` /
-``BENCH_sharded_epoch.json`` at the repo root so PRs can track the
-trajectory) and (when dry-run artifacts exist) the roofline table.
+``BENCH_rnnt_loss.json`` / ``BENCH_sharded_epoch.json`` at the repo
+root so PRs can track the trajectory) and (when dry-run artifacts
+exist) the roofline table.
 REPRO_BENCH_SCALE=micro|small scales corpus/epoch counts.
 """
 from __future__ import annotations
@@ -72,14 +73,20 @@ def main() -> None:
     run_json_bench(_bench_selection_round, "BENCH_selection_round.json",
                    "round_ms", "_round_ms", "resident_over_host_speedup")
 
-    # sharded/chunked epoch benchmark (4-device subprocess; writes its
-    # own BENCH_sharded_epoch.json since it carries two speedup keys)
-    try:
-        from benchmarks.bench_sharded_epoch import bench_sharded_epoch
-        for r in bench_sharded_epoch():
-            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
-    except Exception as e:
-        print(f"bench_sharded_epoch,0,ERROR={type(e).__name__}:{e}")
+    # benchmarks that write their own BENCH_*.json (multiple speedup /
+    # memory keys per record): the RNN-T loss path comparison and the
+    # sharded/chunked epoch benchmark (4-device subprocess)
+    def run_self_writing_bench(mod_name, fn_name):
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=[fn_name])
+            for r in getattr(mod, fn_name)():
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+            print(f"# wrote BENCH artifact of {mod_name}", file=sys.stderr)
+        except Exception as e:
+            print(f"{fn_name},0,ERROR={type(e).__name__}:{e}")
+
+    run_self_writing_bench("bench_rnnt_loss", "bench_rnnt_loss")
+    run_self_writing_bench("bench_sharded_epoch", "bench_sharded_epoch")
 
     # roofline table from dry-run artifacts, if the sweep has run
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",

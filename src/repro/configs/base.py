@@ -171,6 +171,14 @@ class RNNTConfig:
     joint_dim: int = 1024
     vocab_size: int = 1000           # BPE units + blank
     time_reduction: int = 4          # cnn striding
+    # transducer-loss path (DESIGN.md §2): "fused" = custom_vjp
+    # alpha/beta lattice with a vocab-streamed joint (never materializes
+    # the (B,T,U+1,V) tensor); "dense" = the autodiff parity oracle
+    loss_impl: str = "fused"
+    # vocab-chunk size for the fused loss's streamed logsumexp/backward
+    # (<= 0: one chunk of the full vocab — right for smoke vocabs; set
+    # to e.g. 512 when V is large enough that a (B,U+1,V) row dominates)
+    loss_vocab_chunk: int = 0
 
     def n_params(self) -> int:
         n = 0

@@ -106,9 +106,57 @@ def lm_unit_exact(bundle, params, batch, shard=None) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# RNN-T (joint network) factor extraction — error via autodiff through the
-# transducer loss (the analytic LM shortcut doesn't apply to the lattice).
+# RNN-T (joint network) gradient extraction.
+#
+# Fused path (cfg.rnnt.loss_impl == "fused", DESIGN.md §2): the joint
+# gradient G = dL/dW_out is exactly the ``dw_out`` the fused loss's
+# custom_vjp backward emits — alpha/beta occupancies contracted against
+# the streamed joint — so ``jax.grad`` of the fused loss w.r.t. the head
+# weight alone yields the (J, V) last-layer gradient without ever
+# materializing the (B,T,U+1,V) logits, its gradient, or the (B,T,U+1,J)
+# activations.  The sketch is then the two-sided projection
+# ``R1^T G R2`` (identical in expectation to the factor-side
+# ``(H R1)^T (E R2)``, since both equal the projected G).
+#
+# Dense path: error via autodiff through the materialized lattice — the
+# parity oracle.
 # ---------------------------------------------------------------------------
+
+def _rnnt_per_example_nll_scale(batch):
+    """The training loss's per-example scaling: mean over examples of
+    nll / max(u_len, 1)."""
+    B = batch["token_lens"].shape[0]
+    return 1.0 / (jnp.maximum(batch["token_lens"].astype(jnp.float32), 1.0)
+                  * B)
+
+
+def rnnt_joint_grad(bundle, params, batch, shard=None) -> jax.Array:
+    """(J, V) joint-network gradient of the unit's training loss via the
+    fused custom_vjp backward (memory-lean; no joint materialization).
+    ``shard`` pins the joint factors like the training loss does
+    (``act_bsd``; see models/api.py) — identity when None."""
+    from repro.core.rnnt_loss import rnnt_loss_fused
+    from repro.models import rnnt as rnnt_mod
+    from repro.models.common import IDENTITY_SHARDER
+    cfg = bundle.cfg
+    r = cfg.rnnt
+    shard = shard or IDENTITY_SHARDER
+    ze, zp = rnnt_mod.joint_factors(params, cfg, batch["feats"],
+                                    batch["tokens"])
+    ze = shard(ze, "act_bsd")
+    zp = shard(zp, "act_bsd")
+    t_lens = jnp.maximum(batch["feat_lens"] // r.time_reduction, 1)
+    scale = _rnnt_per_example_nll_scale(batch)
+
+    def loss_of_head(w_out):
+        per_ex = rnnt_loss_fused(ze, zp, w_out, batch["tokens"], t_lens,
+                                 batch["token_lens"],
+                                 vocab_chunk=r.loss_vocab_chunk)
+        return jnp.sum(per_ex * scale)
+
+    return jax.grad(loss_of_head)(
+        bundle.head_weight(params).astype(jnp.float32))
+
 
 def rnnt_unit_factors(bundle, params, batch, shard=None):
     from repro.models import rnnt as rnnt_mod
@@ -137,11 +185,17 @@ def rnnt_unit_factors(bundle, params, batch, shard=None):
 
 def rnnt_unit_sketch(bundle, params, batch, proj: Projections,
                      shard=None) -> jax.Array:
+    if bundle.cfg.rnnt.loss_impl == "fused":
+        g = rnnt_joint_grad(bundle, params, batch, shard)
+        return (proj.r_h.astype(jnp.float32).T @ g
+                @ proj.r_v.astype(jnp.float32)).reshape(-1)
     h, e = rnnt_unit_factors(bundle, params, batch, shard)
     return sketch_from_factors(h, e, proj)
 
 
 def rnnt_unit_exact(bundle, params, batch, shard=None) -> jax.Array:
+    if bundle.cfg.rnnt.loss_impl == "fused":
+        return rnnt_joint_grad(bundle, params, batch, shard).reshape(-1)
     h, e = rnnt_unit_factors(bundle, params, batch, shard)
     return exact_from_factors(h, e)
 

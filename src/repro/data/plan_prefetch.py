@@ -22,6 +22,14 @@ served.  A key that will no longer be fetched still occupies a buffer
 slot, so callers that re-key (the loop, after each selection round)
 should call ``invalidate()`` to drop pending work — otherwise orphans
 accumulate until the buffer is permanently full.
+
+Failure semantics: a builder that raises on the worker thread must not
+strand the consumer or leak the thread.  ``get()`` re-raises the
+builder's exception at the consumer (and frees the buffer slot, so the
+caller can retry synchronously); an *orphaned* failed build is simply
+dropped by ``invalidate()``; ``close()`` — also run by ``__del__`` and
+the context manager — cancels what hasn't started and joins the worker
+thread, and is idempotent.
 """
 from __future__ import annotations
 
@@ -38,7 +46,8 @@ class PlanPrefetcher:
     pile up host memory.  ``get(key, build)`` returns the prefetched
     result when ``key`` was scheduled, else falls back to calling
     ``build`` synchronously — the two paths return identical values
-    because builders are pure.
+    because builders are pure.  A prefetched build that *failed*
+    re-raises its exception from ``get()``.
     """
 
     def __init__(self, max_pending: int = 2):
@@ -65,25 +74,34 @@ class PlanPrefetcher:
         return True
 
     def get(self, key: Hashable, build: Callable[[], object]):
-        """The plan for ``key`` — from the buffer when prefetched
-        (propagating any builder exception), else built synchronously."""
+        """The plan for ``key`` — from the buffer when prefetched, else
+        built synchronously.  A builder exception raised on the worker
+        thread propagates here, to the consumer that asked for the key
+        (the slot is freed first, so retrying falls back to a
+        synchronous ``build``)."""
         fut = self._pending.pop(key, None)
         if fut is None:
             self.misses += 1
             return build()
         self.hits += 1
-        return fut.result()
+        return fut.result()        # re-raises the worker's exception
 
     def invalidate(self):
         """Drop every pending entry (cancelling what hasn't started):
         call when the keys change — e.g. a new selection round — so
-        superseded plans don't pin buffer slots or device memory."""
+        superseded plans don't pin buffer slots or device memory.  A
+        dropped entry's result (or exception) is deliberately discarded."""
         for fut in self._pending.values():
             fut.cancel()
         self._pending.clear()
 
     def close(self):
-        """Cancel anything not yet running and release the worker."""
+        """Cancel anything not yet running, drain pending state and join
+        the worker thread.  Idempotent; also invoked by ``__del__`` so a
+        prefetcher dropped without an explicit ``close()`` (e.g. when
+        the training loop dies mid-epoch) still releases its thread."""
+        if self._closed:
+            return
         self._closed = True
         self.invalidate()
         self._ex.shutdown(wait=True)
@@ -93,3 +111,9 @@ class PlanPrefetcher:
 
     def __exit__(self, *exc):
         self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:       # interpreter teardown: best effort
+            pass

@@ -1,0 +1,26 @@
+"""XLA reference for the RNN-T lattice scan.
+
+The oracle lives in ``core/rnnt_loss.py:lattice_scan_ref`` (an outer
+``lax.scan`` over rows, ``lax.associative_scan`` within a row) — this
+module re-exports it under the kernels namespace so every kernel package
+keeps the ``{kernel, ops, ref}`` layout, and ``tests/test_kernels.py``
+can sweep the Pallas kernel against it.
+
+The recurrence (log semiring, per batch row):
+  rows[t] = row_update(logaddexp(rows[t-1] + mult[t], add[t]), emit[t])
+  row_update: a[u] = logaddexp(base[u], a[u-1] + emit[u]), emit[0] = NEG
+with ``rows[-1] = NEG`` so ``add[0]`` seeds the first row.  The alpha
+forward uses it directly; the beta backward uses it on (t, u)-flipped
+rows with the terminal blank injected through ``add``.
+"""
+from __future__ import annotations
+
+from repro.core.rnnt_loss import NEG, lattice_scan_ref
+
+
+def rnnt_lattice_ref(mult, add, emit):
+    """(T, B, U1) x3 -> stacked lattice rows (T, B, U1), fp32."""
+    return lattice_scan_ref(mult, add, emit)
+
+
+__all__ = ["NEG", "rnnt_lattice_ref", "lattice_scan_ref"]

@@ -86,11 +86,16 @@ def launch_train(
     noise: float = 0.0,
     snr_db: float = 10.0,
     batch_units: int = 1,
+    loss_impl: Optional[str] = None,
     ckpt_dir: Optional[str] = None,
     resume: bool = False,
     log_fn=print,
 ) -> History:
     cfg = get_config(arch)
+    if loss_impl is not None and cfg.family == "rnnt":
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, rnnt=dataclasses.replace(cfg.rnnt, loss_impl=loss_impl))
     bundle = build_model(cfg)
     units, val = make_units_for(cfg, n=n, seq=seq, noise=noise,
                                 seed=tc.seed, snr_db=snr_db)
@@ -142,6 +147,11 @@ def main():
                     help="SNR of the injected ASR feature noise (dB); "
                          "only meaningful with --noise > 0 on an RNN-T "
                          "arch")
+    ap.add_argument("--loss-impl", default=None,
+                    choices=["fused", "dense"],
+                    help="RNN-T loss path (DESIGN.md §2): fused "
+                         "custom_vjp lattice (default) or the dense "
+                         "autodiff parity oracle")
     ap.add_argument("--exact-gradients", action="store_true",
                     help="paper-faithful exact last-layer gradients "
                          "(no sketching)")
@@ -165,8 +175,8 @@ def main():
                      epoch_chunk=args.epoch_chunk,
                      plan_prefetch=not args.no_plan_prefetch,
                      n=args.n, seq=args.seq, noise=args.noise,
-                     snr_db=args.snr_db, ckpt_dir=args.ckpt,
-                     resume=args.resume)
+                     snr_db=args.snr_db, loss_impl=args.loss_impl,
+                     ckpt_dir=args.ckpt, resume=args.resume)
     if h.val_loss:
         print(f"done: val {h.val_loss[-1]:.4f}, "
               f"cost {h.cost_units:.2f} epoch-units, "

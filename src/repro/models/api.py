@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.rnnt_loss import rnnt_loss_from_logits
+from repro.core.rnnt_loss import rnnt_loss_from_logits, rnnt_loss_fused
 from repro.models import encdec as encdec_mod
 from repro.models import rnnt as rnnt_mod
 from repro.models import transformer as tfm
@@ -295,12 +295,38 @@ def _build_encdec(cfg: ModelConfig) -> ModelBundle:
 
 def _build_rnnt(cfg: ModelConfig) -> ModelBundle:
     r = cfg.rnnt
+    if r.loss_impl not in ("fused", "dense"):
+        raise ValueError(f"rnnt.loss_impl must be 'fused' or 'dense', "
+                         f"got {r.loss_impl!r}")
+
+    def _t_lens(batch):
+        return jnp.maximum(batch["feat_lens"] // r.time_reduction, 1)
+
+    def per_example_nll(params, batch, shard=IDENTITY_SHARDER):
+        """Per-example transducer NLL, path keyed by ``r.loss_impl``
+        (DESIGN.md §2): ``fused`` streams the joint inside a custom_vjp
+        (no (B,T,U+1,V) tensor, analytic gradients); ``dense`` is the
+        materialized autodiff parity oracle.  The joint factors are
+        pinned with ``shard(..., "act_bsd")`` (batch over data,
+        replicated elsewhere) — on a mesh this anchors GSPMD's
+        propagation at the custom_vjp boundary, which XLA:CPU SPMD
+        otherwise mispartitions through the CRDNN encoder (wrong
+        *values*, not just reordering; see tests/test_sharded_engine.py)."""
+        if r.loss_impl == "fused":
+            ze, zp = rnnt_mod.joint_factors(params, cfg, batch["feats"],
+                                            batch["tokens"])
+            ze = shard(ze, "act_bsd")
+            zp = shard(zp, "act_bsd")
+            return rnnt_loss_fused(
+                ze, zp, params["joint"]["w_out"], batch["tokens"],
+                _t_lens(batch), batch["token_lens"],
+                vocab_chunk=r.loss_vocab_chunk)
+        logits = rnnt_mod.forward(params, cfg, batch["feats"], batch["tokens"])
+        return rnnt_loss_from_logits(logits, batch["tokens"], _t_lens(batch),
+                                     batch["token_lens"])
 
     def per_example_loss(params, batch, shard=IDENTITY_SHARDER, remat=True):
-        logits = rnnt_mod.forward(params, cfg, batch["feats"], batch["tokens"])
-        t_lens = jnp.maximum(batch["feat_lens"] // r.time_reduction, 1)
-        return rnnt_loss_from_logits(logits, batch["tokens"], t_lens,
-                                     batch["token_lens"]) \
+        return per_example_nll(params, batch, shard) \
             / jnp.maximum(batch["token_lens"].astype(jnp.float32), 1.0)
 
     def loss_fn(params, batch, shard=IDENTITY_SHARDER, remat=True):

@@ -149,6 +149,19 @@ def predict(params, cfg, tokens):
     return g
 
 
+def joint_factors(params, cfg, feats, tokens):
+    """Factors of the joint for the fused transducer loss (DESIGN.md §2):
+    -> (ze (B,T',J), zp (B,U+1,J)).  ``tanh(ze[:,:,None] + zp[:,None])``
+    is ``joint_hidden``; the fused loss (``core/rnnt_loss.py``) forms it
+    row-by-row inside its scan instead of materializing (B,T',U+1,J)."""
+    enc = encode(params, cfg, feats)
+    pred = predict(params, cfg, tokens)
+    dt = enc.dtype
+    ze = enc @ params["joint"]["w_enc"].astype(dt)        # (B,T,J)
+    zp = pred @ params["joint"]["w_pred"].astype(dt)      # (B,U1,J)
+    return ze, zp
+
+
 def joint_hidden(params, enc, pred):
     """(B,T,De),(B,U1,Dp) -> pre-vocab joint activations (B,T,U1,J).
     This is the activation whose outer product with dL/dlogits forms the

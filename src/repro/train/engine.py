@@ -56,7 +56,7 @@ from repro.data.pipeline import epoch_plan, subset_epoch_plan
 from repro.train.optim import clip_by_global_norm, make_update_for
 
 
-def make_step_core(bundle, cfg: TrainConfig):
+def make_step_core(bundle, cfg: TrainConfig, shard=None):
     """The un-jitted per-batch SGD update shared by the legacy host loop
     (which jits it per call) and the scanned engines (which embed it in
     the scan body).
@@ -66,12 +66,27 @@ def make_step_core(bundle, cfg: TrainConfig):
     is zeroed (no state advance, no metric contribution); when ``None``
     (host loop — plans it consumes are never padded) no gating ops are
     emitted.
+
+    The loss closure is whatever ``bundle.loss_fn`` resolves to from the
+    model config — for RNN-T that is the fused custom_vjp transducer
+    loss by default (``cfg.rnnt.loss_impl``, DESIGN.md §2), so the
+    scanned epoch's ``value_and_grad`` runs the analytic alpha/beta
+    backward with no ``(B, T, U+1, V)`` joint tensor and no per-scan-step
+    autodiff residuals; ``loss_impl="dense"`` rebuilds every engine on
+    the materialized-joint oracle for parity runs.
+
+    ``shard`` (optional ``Sharder``) is forwarded into the loss for
+    activation-sharding constraints; when ``None`` the emitted jaxpr is
+    identical to the pre-sharder engine.
     """
     _, opt_update = make_update_for(cfg)
 
     def step(params, opt_state, batch, lr, step_on=None):
         def loss(p):
-            total, metrics = bundle.loss_fn(p, batch)
+            if shard is None:
+                total, metrics = bundle.loss_fn(p, batch)
+            else:
+                total, metrics = bundle.loss_fn(p, batch, shard=shard)
             return total, metrics
 
         (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
@@ -166,6 +181,17 @@ class EpochEngine:
             self.spec: Optional[Any] = SpecBuilder(mesh, mode=spec_mode)
         else:
             self.spec = None
+        # RNN-T on a mesh: hand the loss a MeshSharder so the fused
+        # transducer loss can pin its joint-factor boundary ("act_bsd")
+        # — free GSPMD propagation through the CRDNN encoder produces
+        # *wrong values* on XLA:CPU SPMD without the anchor (LM stacks
+        # carry their own in-model annotations and stay sharder-free
+        # here to keep their jaxprs unchanged)
+        if mesh is not None and bundle.cfg.family == "rnnt":
+            from repro.sharding.specs import MeshSharder
+            self.act_shard: Optional[Any] = MeshSharder(mesh, mode=spec_mode)
+        else:
+            self.act_shard = None
         self.units = self._place_units(units)
         self.val_units = (None if val_units is None
                           else self._place_units(val_units))
@@ -178,7 +204,7 @@ class EpochEngine:
         #: number of times an epoch executable (per-epoch or chunked)
         #: has been traced/compiled
         self.n_epoch_traces = 0
-        step_core = make_step_core(bundle, cfg)
+        step_core = make_step_core(bundle, cfg, shard=self.act_shard)
         unit_size = self.unit_size
 
         def make_body(lr):
@@ -212,10 +238,19 @@ class EpochEngine:
         # donate (params, opt_state): the scan carry re-uses their buffers
         self._run = jax.jit(run, donate_argnums=(0, 1))
 
+        act_shard = self.act_shard
+
         def val_mean(params, val_dev):
-            per_unit = jax.vmap(
-                lambda u: bundle.per_example_loss(params, u).mean())(val_dev)
-            return per_unit.mean()
+            # validation gets the same activation anchor as the training
+            # step (the fused RNN-T loss needs it on a mesh; identity
+            # jaxpr when no sharder)
+            def unit_loss(u):
+                if act_shard is None:
+                    return bundle.per_example_loss(params, u).mean()
+                return bundle.per_example_loss(params, u,
+                                               shard=act_shard).mean()
+
+            return jax.vmap(unit_loss)(val_dev).mean()
 
         self._validate = jax.jit(val_mean)
 

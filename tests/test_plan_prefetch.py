@@ -1,0 +1,71 @@
+"""PlanPrefetcher lifecycle: exception propagation, worker join, reuse."""
+import threading
+import time
+
+import pytest
+
+from repro.data.plan_prefetch import PlanPrefetcher
+
+
+def _worker_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith("plan-prefetch")]
+
+
+def test_hit_and_miss_counters():
+    with PlanPrefetcher(max_pending=2) as pf:
+        assert pf.schedule("a", lambda: 1)
+        assert pf.get("a", lambda: -1) == 1           # prefetched
+        assert pf.get("b", lambda: 2) == 2            # synchronous fallback
+        assert (pf.hits, pf.misses) == (1, 1)
+
+
+def test_builder_exception_propagates_to_get():
+    """A worker-thread failure must surface at the consumer, not strand
+    it; the slot is freed so a retry falls back to a synchronous build."""
+    with PlanPrefetcher() as pf:
+        pf.schedule("k", lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            pf.get("k", lambda: None)
+        # slot freed: same key now builds synchronously
+        assert pf.get("k", lambda: 42) == 42
+
+
+def test_orphaned_failed_build_does_not_block_close():
+    """A failed build whose key is never fetched (e.g. superseded by a
+    selection round) must not wedge invalidate()/close()."""
+    pf = PlanPrefetcher()
+    pf.schedule("orphan", lambda: 1 / 0)
+    time.sleep(0.05)                   # let the worker run (and fail)
+    pf.invalidate()
+    pf.close()
+    assert not _worker_threads()
+
+
+def test_close_joins_worker_and_is_idempotent():
+    pf = PlanPrefetcher()
+    pf.schedule("a", lambda: time.sleep(0.02) or "plan")
+    pf.close()
+    assert not _worker_threads()
+    pf.close()                                        # idempotent
+    # closed prefetcher degrades to synchronous builds
+    assert not pf.schedule("b", lambda: 1)
+    assert pf.get("b", lambda: "sync") == "sync"
+
+
+def test_del_releases_worker():
+    pf = PlanPrefetcher()
+    pf.schedule("a", lambda: 1)
+    pf.__del__()
+    assert not _worker_threads()
+
+
+def test_max_pending_bounds_buffer():
+    ev = threading.Event()
+    with PlanPrefetcher(max_pending=2) as pf:
+        assert pf.schedule("a", ev.wait)
+        assert pf.schedule("b", lambda: 2)
+        assert pf.schedule("a", lambda: -1)           # idempotent re-key
+        assert not pf.schedule("c", lambda: 3)        # buffer full
+        ev.set()
+    assert not _worker_threads()

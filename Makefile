@@ -4,9 +4,10 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all bench bench-sharded bench-rnnt docs-check
+.PHONY: test-fast test-all bench bench-sharded bench-rnnt bench-compress \
+	docs-check
 
-# fast tier: everything not marked slow (< ~2 min) — the development loop
+# fast tier: everything not marked slow (~3-4 min) — the development loop
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
@@ -32,6 +33,12 @@ bench-sharded:
 # steps/sec and compiled peak temp memory (writes BENCH_rnnt_loss.json)
 bench-rnnt:
 	$(PY) -m benchmarks.bench_rnnt_loss
+
+# just the compressed pod-collective step benchmark: data x pod engine
+# (none/bf16/topk compressed_psum) vs the GSPMD-only data x model engine
+# on a 4-device subprocess (writes BENCH_compressed_step.json)
+bench-compress:
+	$(PY) -m benchmarks.bench_compressed_step
 
 # docs integrity: no dangling file refs / make targets / DESIGN.md § cites
 docs-check:

@@ -252,6 +252,15 @@ class TrainConfig:
     anneal_factor: float = 0.8
     improvement_threshold: float = 0.0025
     seed: int = 0
+    # cross-pod gradient compression (DESIGN.md §5): when the training
+    # mesh carries a `pod_axis` axis, the scanned engine computes per-pod
+    # gradients and runs an explicit `train/compress.py:compressed_psum`
+    # over it inside the epoch scan — "none" keeps that collective dense
+    # fp32, "bf16" halves its wire width, "topk" sends the k largest
+    # entries per leaf with error feedback carried in the scan state
+    compress_mode: str = "none"      # none | bf16 | topk
+    compress_k_frac: float = 0.05    # top-k fraction per gradient leaf
+    pod_axis: str = "pod"            # mesh axis name of the slow pod axis
     pgm: PGMConfig = field(default_factory=PGMConfig)
 
 

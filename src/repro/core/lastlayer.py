@@ -53,14 +53,14 @@ def streamed_er2(h, w_head, targets, scale, r_v, chunk: int = 8192):
     N, d = h.shape
     V = w_head.shape[1]
     k2 = r_v.shape[1]
-    nc = -(-V // chunk)
-    pad = nc * chunk - V
-    w = jnp.pad(w_head.astype(jnp.float32), ((0, 0), (0, pad)),
-                constant_values=0.0)
-    rv = jnp.pad(r_v.astype(jnp.float32), ((0, pad), (0, 0)))
-    w = w.reshape(d, nc, chunk).transpose(1, 0, 2)            # (nc,d,chunk)
-    rv = rv.reshape(nc, chunk, k2)
-    valid = (jnp.arange(nc * chunk).reshape(nc, chunk) < V)
+    # chunks-leading pad/reshape/validity layout shared with the fused
+    # RNN-T loss (core/chunking.py) so the mask convention cannot drift
+    from repro.core.chunking import (chunk_vocab_axis, resolve_vocab_chunk,
+                                     vocab_chunk_mask)
+    chunk = resolve_vocab_chunk(V, chunk)
+    w = chunk_vocab_axis(w_head.astype(jnp.float32), chunk, axis=1)
+    rv = chunk_vocab_axis(r_v.astype(jnp.float32), chunk, axis=0)
+    valid = vocab_chunk_mask(V, chunk)
 
     # single pass: flash-style online softmax accumulation of P @ R2 —
     # the unnormalized accumulator is rescaled as the running max moves

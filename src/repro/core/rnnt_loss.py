@@ -168,15 +168,12 @@ def rnnt_loss_from_logits(logits, labels, t_lens, u_lens, blank: int = 0):
 
 def _vocab_chunks(w_out, vocab_chunk: int):
     """Pad/reshape the head to (n_chunks, J, C) plus a column-validity
-    mask (n_chunks, C) — the streaming layout of the row scans."""
-    J, V = w_out.shape
-    chunk = V if vocab_chunk <= 0 else min(int(vocab_chunk), V)
-    nc = -(-V // chunk)
-    pad = nc * chunk - V
-    wp = jnp.pad(w_out, ((0, 0), (0, pad)))
-    wp = wp.reshape(J, nc, chunk).transpose(1, 0, 2)            # (nc,J,C)
-    valid = (jnp.arange(nc * chunk).reshape(nc, chunk) < V)
-    return wp, valid
+    mask (n_chunks, C) — the streaming layout of the row scans, shared
+    with ``core/lastlayer.py:streamed_er2`` via ``core/chunking.py`` so
+    the padding/mask convention cannot drift."""
+    from repro.core.chunking import resolve_vocab_chunk, vocab_chunks
+    V = w_out.shape[1]
+    return vocab_chunks(w_out, resolve_vocab_chunk(V, vocab_chunk), axis=1)
 
 
 def _row_scores(z, wp, valid, w_blank, w_lab, emit_valid, logz_only=False):

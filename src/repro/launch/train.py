@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b-smoke
       --method pgm --epochs 6 [--engine scan|host] [--mesh 2x4]
+      [--mesh-axes data,pod --compress-mode bf16|topk]
       [--epoch-chunk 4] [--resident-selection] [--ckpt DIR] [--resume]
       [--noise 0.2 --snr-db 5]
 
@@ -38,14 +39,22 @@ from repro.models.api import build_model
 from repro.train.loop import History, train_with_selection
 
 
-def parse_mesh(spec: Optional[str]):
-    """'2x4' -> a (data, model) mesh; None/'' -> no mesh (single device)."""
+def parse_mesh(spec: Optional[str], axes: str = "data,model"):
+    """'2x4' -> a 2-axis mesh; None/'' -> no mesh (single device).
+
+    ``axes`` names the two mesh axes (comma-separated).  The default
+    ``data,model`` is the GSPMD FSDP/TP training mesh; ``data,pod``
+    builds the two-level mesh whose slow ``pod`` axis carries the
+    explicit compressed gradient collective (``--compress-mode``,
+    DESIGN.md §5)."""
     if not spec:
         return None
     dims = tuple(int(x) for x in spec.lower().split("x"))
-    if len(dims) != 2:
-        raise ValueError(f"mesh spec must be DATAxMODEL, got {spec!r}")
-    return jax.make_mesh(dims, ("data", "model"))
+    names = tuple(a.strip() for a in axes.split(","))
+    if len(dims) != 2 or len(names) != 2:
+        raise ValueError(f"mesh spec must be AxB over two named axes, "
+                         f"got {spec!r} over {axes!r}")
+    return jax.make_mesh(dims, names)
 
 
 def make_units_for(cfg, *, n: int, seq: int, noise: float, seed: int = 0,
@@ -120,6 +129,21 @@ def main():
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL, e.g. 2x4 (default: no mesh); shards "
                          "the epoch engine, units and selection")
+    ap.add_argument("--mesh-axes", default="data,model",
+                    help="names of the two mesh axes; 'data,pod' builds "
+                         "the two-level data x pod mesh whose slow axis "
+                         "runs the explicit compressed gradient "
+                         "collective (DESIGN.md §5)")
+    ap.add_argument("--compress-mode", default="none",
+                    choices=["none", "bf16", "topk"],
+                    help="cross-pod gradient compressor on the 'pod' "
+                         "mesh axis (train/compress.py): bf16 halves "
+                         "the collective's wire width, topk sends the "
+                         "k largest entries per leaf with error "
+                         "feedback; requires --mesh-axes data,pod")
+    ap.add_argument("--compress-k-frac", type=float, default=0.05,
+                    help="top-k fraction per gradient leaf for "
+                         "--compress-mode topk")
     ap.add_argument("--spec-mode", default="tp",
                     choices=["tp", "fsdp_sp", "fsdp_batch"],
                     help="SpecBuilder param-sharding policy for the "
@@ -163,6 +187,8 @@ def main():
     tc = TrainConfig(
         lr=args.lr, optimizer=args.optimizer, epochs=args.epochs,
         seed=args.seed,
+        compress_mode=args.compress_mode,
+        compress_k_frac=args.compress_k_frac,
         pgm=PGMConfig(subset_fraction=args.subset,
                       n_partitions=args.partitions,
                       select_every=args.select_every,
@@ -171,7 +197,8 @@ def main():
                       use_sketch=not args.exact_gradients))
     h = launch_train(args.arch, tc, method=args.method, engine=args.engine,
                      resident_selection=args.resident_selection,
-                     mesh=parse_mesh(args.mesh), spec_mode=args.spec_mode,
+                     mesh=parse_mesh(args.mesh, args.mesh_axes),
+                     spec_mode=args.spec_mode,
                      epoch_chunk=args.epoch_chunk,
                      plan_prefetch=not args.no_plan_prefetch,
                      n=args.n, seq=args.seq, noise=args.noise,

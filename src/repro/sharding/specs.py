@@ -52,20 +52,32 @@ class SpecBuilder:
                      archs whose sequence axis cannot shard)
     """
 
-    def __init__(self, mesh, *, fsdp: bool = True, mode: str = "tp"):
+    def __init__(self, mesh, *, fsdp: bool = True, mode: str = "tp",
+                 pod_axis: Optional[str] = None):
+        """``pod_axis`` names a slow cross-pod mesh axis that params (and
+        their mirrored optimizer/error-feedback states) must NOT shard
+        over — the standard multi-pod layout is FSDP *within* a pod and
+        plain replication *across* pods, with the cross-pod gradient
+        collective handled explicitly (``train/compress.py``,
+        DESIGN.md §5).  The pod axis is excluded from both the data-
+        parallel and the FSDP axis sets; meshes without a ``model`` axis
+        (e.g. ``data x pod``) degrade gracefully to tp=None."""
         self.mesh = mesh
         self.mode = mode
-        dp = tuple(a for a in mesh.axis_names if a != "model")
+        self.pod_axis = pod_axis
+        has_model = "model" in mesh.axis_names
+        dp = tuple(a for a in mesh.axis_names
+                   if a != "model" and a != pod_axis)
         self.dp_axes = dp
-        self.all_axes = tuple(mesh.axis_names)
-        self.dp = dp if len(dp) > 1 else dp[0]
+        self.all_axes = tuple(a for a in mesh.axis_names if a != pod_axis)
+        self.dp = dp if len(dp) > 1 else (dp[0] if dp else None)
         if mode == "tp":
-            self.tp = "model"
+            self.tp = "model" if has_model else None
             self.fsdp = self.dp if fsdp else None
         elif mode == "fsdp_sp":
             self.tp = None                     # no tensor parallelism
             self.fsdp = self.all_axes          # params over everything
-            self.seq = "model"
+            self.seq = "model" if has_model else None
         elif mode == "fsdp_batch":
             self.tp = None
             self.fsdp = self.all_axes
@@ -250,9 +262,10 @@ _PARAM_RULES: Dict[str, Tuple] = {
 class MeshSharder(Sharder):
     """Activation-constraint callback handed into model forwards."""
 
-    def __init__(self, mesh, *, enable: bool = True, mode: str = "tp"):
+    def __init__(self, mesh, *, enable: bool = True, mode: str = "tp",
+                 pod_axis: Optional[str] = None):
         self.mesh = mesh
-        self.b = SpecBuilder(mesh, mode=mode)
+        self.b = SpecBuilder(mesh, mode=mode, pod_axis=pod_axis)
         self.enable = enable
 
     def kv_repeat(self, n_heads: int, n_kv_heads: int) -> int:
@@ -261,7 +274,8 @@ class MeshSharder(Sharder):
         being computed via per-block all-reduces (head_dim contraction).
         Returns 1 when no such r exists (falls back to head_dim sharding)
         or when KV heads already align."""
-        if not self.enable or self.b.mode != "tp":
+        if not self.enable or self.b.mode != "tp" \
+                or "model" not in self.mesh.axis_names:
             return 1
         tp = _axsize(self.mesh, "model")
         if n_kv_heads % tp == 0 or tp == 1:
@@ -296,7 +310,7 @@ class MeshSharder(Sharder):
                 return jax.lax.with_sharding_constraint(
                     x, NamedSharding(m, spec))
             return x
-        tp = "model"
+        tp = "model" if "model" in m.axis_names else None
         if name == "act_bsd" and x.ndim == 3:
             spec = P(dp if _div(shape[0], m, dp) else None, None, None)
         elif name == "act_ff" and x.ndim == 3:

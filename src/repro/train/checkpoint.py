@@ -34,12 +34,17 @@ def _flatten(tree, prefix="") -> Dict[str, Any]:
 
 
 def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
-         mesh_shape: Optional[Dict[str, int]] = None):
+         mesh_shape: Optional[Dict[str, int]] = None,
+         compress_mode: Optional[str] = None):
     """Blocking atomic save.  ``mesh_shape`` (``{axis: size}`` or None
     for single-device) is recorded in the manifest so a restore can
     report/reshard across mesh-topology changes (DESIGN.md §5); arrays
     are always stored as full host arrays, so restore onto any mesh is
-    a plain ``device_put`` with the new shardings."""
+    a plain ``device_put`` with the new shardings.  ``compress_mode``
+    records the pod-axis gradient compressor next to ``mesh_shape`` when
+    the tree carries per-pod error-feedback state (key ``err``), so a
+    resume under a different compressor can be flagged instead of
+    silently mixing residual semantics."""
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f".tmp_{step}")
     final = os.path.join(ckpt_dir, f"step_{step}")
@@ -55,6 +60,7 @@ def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
         "step": int(step),
         "time": time.time(),
         "mesh_shape": mesh_shape,
+        "compress_mode": compress_mode,
         "arrays": {k: {"shape": list(np.shape(v)),
                        "dtype": str(np.asarray(v).dtype),
                        "sha256": hashlib.sha256(
@@ -84,6 +90,19 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
                  if d.startswith("step_")] if os.path.isdir(ckpt_dir) else []
         return max(steps) if steps else None
     return int(open(p).read().strip())
+
+
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> Dict:
+    """Manifest of a checkpoint without loading its arrays — lets a
+    caller inspect what was saved (e.g. whether error-feedback state
+    exists, which ``compress_mode`` wrote it) before building a restore
+    template."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"step_{step}",
+                           "manifest.json")) as f:
+        return json.load(f)
 
 
 def restore(ckpt_dir: str, step: Optional[int] = None, template=None,
@@ -140,22 +159,23 @@ class AsyncCheckpointer:
             item = self._q.get()
             if item is None:
                 return
-            step, host_tree, extra, mesh_shape = item
+            step, host_tree, extra, mesh_shape, compress_mode = item
             try:
                 save(self.ckpt_dir, step, host_tree, extra,
-                     mesh_shape=mesh_shape)
+                     mesh_shape=mesh_shape, compress_mode=compress_mode)
             except BaseException as e:          # surfaced on next submit/wait
                 self._err = e
             finally:
                 self._q.task_done()
 
     def submit(self, step: int, tree, extra: Optional[Dict] = None,
-               mesh_shape: Optional[Dict[str, int]] = None):
+               mesh_shape: Optional[Dict[str, int]] = None,
+               compress_mode: Optional[str] = None):
         if self._err:
             raise self._err
         host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)),
                                  tree)
-        self._q.put((step, host_tree, extra, mesh_shape))
+        self._q.put((step, host_tree, extra, mesh_shape, compress_mode))
 
     def wait(self):
         self._q.join()

@@ -3,19 +3,25 @@
 Over the slow DCN ``pod`` axis, all-reducing full fp32 gradients is the
 dominant collective.  Two composable compressors:
 
-  * bf16 cast (2x):   lossless enough for gradient averaging in practice;
+  * bf16 cast (2x): the collective itself runs at bf16 width — the cast
+    happens *before* the reduce and the fp32 upcast after, so the wire
+    moves half the bytes (asserted on the lowered HLO by
+    ``tests/test_compress.py``);
   * top-k sparsification with **error feedback** (Stich et al. 2018):
-    transmit the k largest-|g| entries per tensor, accumulate the residual
-    locally and add it to the next step's gradient — provably convergent
-    for SGD.
+    transmit exactly the k largest-|g| entries per tensor, accumulate the
+    residual locally and add it to the next step's gradient — provably
+    convergent for SGD.
 
-``compressed_psum`` wires a compressor into an explicit shard_map
-all-reduce over a named axis (the pattern a multi-pod deployment uses for
-the ``pod`` axis while leaving intra-pod reductions dense).
+``compressed_psum`` wires a compressor into an all-reduce-mean over a
+named axis.  The axis may be bound by an explicit ``shard_map`` (the
+standalone multi-pod plumbing pattern, ``tests/test_sharding.py``) or by
+the scanned engine's per-pod ``vmap`` (``train/engine.py`` runs it on
+the ``pod`` mesh axis *inside* the jitted epoch scan, DESIGN.md §5) —
+``jax.lax.pmean`` is context-agnostic, so the same function serves both.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,15 +35,23 @@ def topk_compress(g, err, k_frac: float = 0.05):
     """Returns (sparse_g, new_err).  sparse_g has the same dense shape
     (zeros off-support) — the collective still benefits when the runtime
     all-reduces bf16-sparse or when k_frac maps to gather-scatter; the
-    error-feedback math is exact either way."""
+    error-feedback math is exact either way.
+
+    Exactly ``k = max(int(size * k_frac), 1)`` entries are selected per
+    leaf via ``top_k`` indices + scatter — never more.  (A threshold
+    mask ``|g| >= kth`` would over-select on ties, and when the k-th
+    largest |g| is 0 — common for sparse/embedding-style gradients — it
+    would silently select the *entire* tensor, degrading the collective
+    back to dense; ``tests/test_compress.py`` holds the regression.)
+    """
 
     def one(l, e):
-        l32 = l.astype(jnp.float32) + e
-        flat = l32.reshape(-1)
+        flat = (l.astype(jnp.float32) + e).reshape(-1)
         k = max(int(flat.size * k_frac), 1)
-        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
-        mask = jnp.abs(flat) >= thresh
-        sent = jnp.where(mask, flat, 0.0)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        sent = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        # residual is exact: flat - sent is 0 on the support, flat off it,
+        # so sent + new_err == g + old_err bit-for-bit
         return sent.reshape(l.shape), (flat - sent).reshape(l.shape)
 
     flat_g, tdef = jax.tree_util.tree_flatten(g)
@@ -48,22 +62,31 @@ def topk_compress(g, err, k_frac: float = 0.05):
     return sent, new_err
 
 
-def init_error_state(params):
-    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+def init_error_state(params, n_pods: Optional[int] = None):
+    """Zero error-feedback state mirroring ``params``.  With ``n_pods``
+    every leaf gains a leading pod dimension — the per-pod residuals the
+    scanned engine carries (sharded ``P(pod, *param_fsdp_spec)``) and
+    checkpoints next to the optimizer state."""
+    lead = () if n_pods is None else (int(n_pods),)
+    return jax.tree.map(lambda p: jnp.zeros(lead + tuple(p.shape),
+                                            jnp.float32), params)
 
 
 def compressed_psum(grads, axis: str, mode: str = "bf16", err=None,
                     k_frac: float = 0.05):
-    """All-reduce-mean grads over ``axis`` (inside shard_map) with the
-    selected compressor.  Returns (mean grads fp32, new error state)."""
+    """All-reduce-mean grads over the named ``axis`` (bound by shard_map
+    or a per-pod vmap) with the selected compressor.  Returns
+    (mean grads fp32, new error state)."""
     if mode == "none":
         return jax.tree.map(
             lambda l: jax.lax.pmean(l.astype(jnp.float32), axis), grads), err
     if mode == "bf16":
-        sent = bf16_compress(grads)
-        red = jax.tree.map(
-            lambda l: jax.lax.pmean(l.astype(jnp.float32), axis), sent)
-        return red, err
+        # cast BEFORE the pmean so the collective itself moves bf16 —
+        # reducing an fp32 upcast would keep the wire at full width and
+        # make the documented 2x reduction false
+        return jax.tree.map(
+            lambda l: jax.lax.pmean(l.astype(jnp.bfloat16), axis)
+            .astype(jnp.float32), grads), err
     if mode == "topk":
         sent, new_err = topk_compress(grads, err, k_frac)
         red = jax.tree.map(lambda l: jax.lax.pmean(l, axis), sent)

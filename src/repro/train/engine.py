@@ -44,7 +44,7 @@ by ``tests/test_resident_selection.py`` / ``tests/test_sharded_engine.py``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,10 +53,25 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import TrainConfig
 from repro.data.pipeline import epoch_plan, subset_epoch_plan
-from repro.train.optim import clip_by_global_norm, make_update_for
+from repro.train.compress import compressed_psum, init_error_state
+from repro.train.optim import clip_by_global_norm, gate_step, make_update_for
 
 
-def make_step_core(bundle, cfg: TrainConfig, shard=None):
+class PodSpec(NamedTuple):
+    """Static description of the two-level ``data x pod`` step
+    (DESIGN.md §5): which mesh axis is the slow cross-pod dimension, how
+    many pods it has, and which ``train/compress.py`` compressor runs on
+    its gradient collective."""
+
+    axis: str          # mesh axis name of the slow cross-pod dimension
+    n_pods: int
+    mode: str          # none | bf16 | topk (compressed_psum mode)
+    k_frac: float      # top-k fraction per leaf (mode == "topk")
+    data_axis: str     # fast intra-pod data axis (dense GSPMD psum)
+    mesh: Any
+
+
+def make_step_core(bundle, cfg: TrainConfig, shard=None, pod=None):
     """The un-jitted per-batch SGD update shared by the legacy host loop
     (which jits it per call) and the scanned engines (which embed it in
     the scan body).
@@ -78,28 +93,113 @@ def make_step_core(bundle, cfg: TrainConfig, shard=None):
     ``shard`` (optional ``Sharder``) is forwarded into the loss for
     activation-sharding constraints; when ``None`` the emitted jaxpr is
     identical to the pre-sharder engine.
+
+    ``pod`` (optional :class:`PodSpec`) switches the step to the
+    two-level ``data x pod`` form (DESIGN.md §5): the batch's example
+    axis is split into ``n_pods`` equal slices, each pod takes
+    ``value_and_grad`` of its *local* weighted loss (rescaled so the pod
+    mean of objectives equals the global weighted mean — the loss
+    denominator is the weight sum, so per-pod means don't average to the
+    global mean without the ``W_k / W`` factor), and the per-pod
+    gradients meet in an explicit
+    ``train/compress.py:compressed_psum`` over the pod axis — bound here
+    by a ``vmap(axis_name=pod.axis, spmd_axis_name=pod.axis)``, which
+    GSPMD lowers to a real cross-pod all-reduce while the intra-pod
+    example reduction stays a dense GSPMD mean-psum over ``data``.  The
+    pod step's signature gains the per-pod error-feedback state:
+    ``step(params, opt_state, batch, lr, err, step_on) ->
+    (params, opt_state, metrics, err)``; on gated-off padding steps the
+    error state is returned bit-identically (``optim.gate_step``).
+
+    Aux losses (e.g. the MoE router load-balance penalty) are computed
+    per pod and pod-averaged — the standard data-parallel approximation
+    (each replica balances its local sub-batch).  For aux-free families
+    (dense LMs, RNN-T) this is exact and ``mode="none"`` stays bit-close
+    to the one-level engines; for MoE the load-balance term is nonlinear
+    in batch composition, so per-pod aux is a deliberate semantic choice,
+    not a parity-preserving identity.
     """
     _, opt_update = make_update_for(cfg)
 
-    def step(params, opt_state, batch, lr, step_on=None):
-        def loss(p):
-            if shard is None:
-                total, metrics = bundle.loss_fn(p, batch)
-            else:
-                total, metrics = bundle.loss_fn(p, batch, shard=shard)
-            return total, metrics
+    if pod is None:
+        def step(params, opt_state, batch, lr, step_on=None):
+            def loss(p):
+                if shard is None:
+                    total, metrics = bundle.loss_fn(p, batch)
+                else:
+                    total, metrics = bundle.loss_fn(p, batch, shard=shard)
+                return total, metrics
 
-        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            (l, metrics), grads = jax.value_and_grad(loss,
+                                                     has_aux=True)(params)
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            params, opt_state = opt_update(params, grads, opt_state, lr,
+                                           step_on=step_on)
+            metrics = dict(metrics, grad_norm=gnorm)
+            if step_on is not None:
+                metrics = {k: jnp.where(step_on, v, jnp.zeros_like(v))
+                           for k, v in metrics.items()}
+            return params, opt_state, metrics
+
+        return step
+
+    data_size = pod.mesh.shape[pod.data_axis]
+
+    def split_pods(v):
+        """(E, ...) -> (n_pods, E/n_pods, ...) constrained P(pod, data)."""
+        v = v.reshape((pod.n_pods, v.shape[0] // pod.n_pods) + v.shape[1:])
+        ax = pod.data_axis if v.shape[1] % data_size == 0 else None
+        return jax.lax.with_sharding_constraint(
+            v, NamedSharding(pod.mesh,
+                             P(pod.axis, ax, *([None] * (v.ndim - 2)))))
+
+    def pod_step(params, opt_state, batch, lr, err, step_on=None):
+        bp = {k: split_pods(v) for k, v in batch.items()}
+
+        def per_pod(b_k, e_k):
+            w = b_k.get("weights")
+            W_k = (jnp.sum(w.astype(jnp.float32)) if w is not None
+                   else jnp.float32(jax.tree.leaves(b_k)[0].shape[0]))
+            # global weight sum / n_pods: the tiny scalar collective that
+            # turns per-pod weighted means into the global weighted mean
+            W = jax.lax.pmean(W_k, pod.axis)
+            wr = W_k / jnp.maximum(W, 1e-9)
+
+            def obj(p):
+                if shard is None:
+                    total, m = bundle.loss_fn(p, b_k)
+                else:
+                    total, m = bundle.loss_fn(p, b_k, shard=shard)
+                return m["loss"] * wr + m.get("aux_loss", 0.0), m
+
+            (_, m), grads = jax.value_and_grad(obj, has_aux=True)(params)
+            grads, e_new = compressed_psum(grads, pod.axis, pod.mode,
+                                           err=e_k, k_frac=pod.k_frac)
+            metrics = {k: jax.lax.pmean(v, pod.axis) for k, v in m.items()}
+            metrics["loss"] = jax.lax.pmean(m["loss"] * wr, pod.axis)
+            if "total_loss" in m:
+                metrics["total_loss"] = (metrics["loss"]
+                                         + metrics.get("aux_loss", 0.0))
+            return grads, e_new, metrics
+
+        # the pmean over the *complete* pod axis leaves grads/metrics
+        # unbatched (out_axes=None): only the error state stays per-pod
+        grads, new_err, metrics = jax.vmap(
+            per_pod, in_axes=(0, 0), out_axes=(None, 0, None),
+            axis_name=pod.axis, spmd_axis_name=pod.axis)(bp, err)
         grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
         params, opt_state = opt_update(params, grads, opt_state, lr,
                                        step_on=step_on)
         metrics = dict(metrics, grad_norm=gnorm)
         if step_on is not None:
+            # padding batches advance nothing: the error-feedback state is
+            # selected back bit-exactly, like params/opt_state
+            new_err = gate_step(step_on, new_err, err)
             metrics = {k: jnp.where(step_on, v, jnp.zeros_like(v))
                        for k, v in metrics.items()}
-        return params, opt_state, metrics
+        return params, opt_state, metrics, new_err
 
-    return step
+    return pod_step
 
 
 def newbob_step(lr, prev_loss, val_loss, anneal_factor, threshold):
@@ -145,6 +245,22 @@ class EpochEngine:
     restore).  Without a mesh the emitted jaxpr is identical to the
     single-device engine.
 
+    Two-level ``data x pod`` mode (DESIGN.md §5): when the mesh carries
+    ``cfg.pod_axis``, the scan body computes per-pod gradients (gathered
+    batches place their example axis over ``(pod, data)`` jointly; units
+    stay data-sharded/pod-replicated) and runs
+    an explicit ``train/compress.py:compressed_psum`` —
+    ``cfg.compress_mode`` ``none`` / ``bf16`` / ``topk`` — over the slow
+    pod axis, while the intra-pod example reduction stays a dense GSPMD
+    mean-psum over ``data``.  Params (and the mirrored optimizer state)
+    keep FSDP specs over ``data`` only — replicated across pods, the
+    standard multi-pod layout.  Top-k error-feedback residuals live in
+    ``compress_state``: per-pod leaves ``(n_pods, *param_shape)`` sharded
+    ``P(pod, *param_fsdp_spec)``, donated into every dispatch as part of
+    the scan carry, advanced not-at-all on weight-0 padding steps
+    (``optim.gate_step``), and checkpointed next to (params, opt_state)
+    so resume is bit-exact (``train/loop.py``).
+
     Plans: ``full_plan`` / ``subset_plan`` return ``(batch_idx, batch_w)``
     index/weight arrays of shape ``(n_steps, batch_units)``.  Both are
     pure functions of ``(seed, epoch)`` (resume rebuilds them exactly —
@@ -176,9 +292,30 @@ class EpochEngine:
         self.batch_units = int(batch_units)
         self.mesh = mesh
         self.data_axis = data_axis
+        # two-level data x pod mode (DESIGN.md §5): active whenever the
+        # mesh carries the configured pod axis — the step then computes
+        # per-pod gradients and runs compressed_psum over that axis
+        # inside the epoch scan
+        pod_active = (mesh is not None
+                      and cfg.pod_axis in getattr(mesh, "axis_names", ()))
+        if cfg.compress_mode != "none" and not pod_active:
+            raise ValueError(
+                f"compress_mode={cfg.compress_mode!r} needs a mesh with a "
+                f"{cfg.pod_axis!r} axis (e.g. --mesh 2x2 with axes "
+                f"data x pod); got mesh="
+                f"{None if mesh is None else tuple(mesh.axis_names)}")
+        self.pod_axis = cfg.pod_axis if pod_active else None
+        self.n_pods = int(mesh.shape[cfg.pod_axis]) if pod_active else 0
+        self._pod = (PodSpec(cfg.pod_axis, self.n_pods, cfg.compress_mode,
+                             cfg.compress_k_frac, data_axis, mesh)
+                     if pod_active else None)
+        #: per-pod top-k error-feedback residuals (None until the first
+        #: topk epoch or a checkpoint restore; donated into every run)
+        self.compress_state: Optional[Any] = None
         if mesh is not None:
             from repro.sharding.specs import SpecBuilder
-            self.spec: Optional[Any] = SpecBuilder(mesh, mode=spec_mode)
+            self.spec: Optional[Any] = SpecBuilder(mesh, mode=spec_mode,
+                                                   pod_axis=self.pod_axis)
         else:
             self.spec = None
         # RNN-T on a mesh: hand the loss a MeshSharder so the fused
@@ -186,10 +323,15 @@ class EpochEngine:
         # — free GSPMD propagation through the CRDNN encoder produces
         # *wrong values* on XLA:CPU SPMD without the anchor (LM stacks
         # carry their own in-model annotations and stay sharder-free
-        # here to keep their jaxprs unchanged)
-        if mesh is not None and bundle.cfg.family == "rnnt":
+        # here to keep their jaxprs unchanged).  Pod mode anchors every
+        # family: the per-pod vmap prepends the pod axis to each act_bsd
+        # spec (spmd_axis_name), and without the anchor the partitioner
+        # falls back to full rematerialization of the layer-scan carry
+        if mesh is not None and (bundle.cfg.family == "rnnt"
+                                 or pod_active):
             from repro.sharding.specs import MeshSharder
-            self.act_shard: Optional[Any] = MeshSharder(mesh, mode=spec_mode)
+            self.act_shard: Optional[Any] = MeshSharder(
+                mesh, mode=spec_mode, pod_axis=self.pod_axis)
         else:
             self.act_shard = None
         self.units = self._place_units(units)
@@ -204,12 +346,23 @@ class EpochEngine:
         #: number of times an epoch executable (per-epoch or chunked)
         #: has been traced/compiled
         self.n_epoch_traces = 0
-        step_core = make_step_core(bundle, cfg, shard=self.act_shard)
+        if self._pod is not None and \
+                (self.batch_units * self.unit_size) % self.n_pods:
+            raise ValueError(
+                f"batch ({self.batch_units} units x {self.unit_size} "
+                f"examples) must divide into n_pods={self.n_pods} equal "
+                f"per-pod slices")
+        step_core = make_step_core(bundle, cfg, shard=self.act_shard,
+                                   pod=self._pod)
         unit_size = self.unit_size
+        pod = self._pod
 
         def make_body(lr):
             def body(carry, xs):
-                p, s = carry
+                if pod is None:
+                    p, s = carry
+                else:
+                    p, s, err = carry
                 idx, w = xs
                 # plan rows are wholly real or wholly padding; padding
                 # rows carry id -1 / weight 0 and must be bit-exact no-ops
@@ -223,20 +376,39 @@ class EpochEngine:
                 if "weights" in batch:
                     batch = dict(batch, weights=batch["weights"]
                                  * jnp.repeat(w, unit_size))
-                p, s, metrics = step_core(p, s, batch, lr, step_on=live)
-                return (p, s), metrics["loss"]
+                if pod is None:
+                    p, s, metrics = step_core(p, s, batch, lr, step_on=live)
+                    return (p, s), metrics["loss"]
+                p, s, metrics, err = step_core(p, s, batch, lr, err,
+                                               step_on=live)
+                return (p, s, err), metrics["loss"]
 
             return body
 
-        def run(params, opt_state, batch_idx, batch_w, lr):
-            self.n_epoch_traces += 1  # python side effect: counts traces
-            params, opt_state = self._constrain_state(params, opt_state)
-            (params, opt_state), losses = jax.lax.scan(
-                make_body(lr), (params, opt_state), (batch_idx, batch_w))
-            return params, opt_state, losses
+        if pod is None:
+            def run(params, opt_state, batch_idx, batch_w, lr):
+                self.n_epoch_traces += 1  # python side effect: counts traces
+                params, opt_state = self._constrain_state(params, opt_state)
+                (params, opt_state), losses = jax.lax.scan(
+                    make_body(lr), (params, opt_state),
+                    (batch_idx, batch_w))
+                return params, opt_state, losses
 
-        # donate (params, opt_state): the scan carry re-uses their buffers
-        self._run = jax.jit(run, donate_argnums=(0, 1))
+            # donate (params, opt_state): the scan carry re-uses their
+            # buffers
+            self._run = jax.jit(run, donate_argnums=(0, 1))
+        else:
+            def run(params, opt_state, err, batch_idx, batch_w, lr):
+                self.n_epoch_traces += 1
+                params, opt_state = self._constrain_state(params, opt_state)
+                err = self._constrain_err(err)
+                (params, opt_state, err), losses = jax.lax.scan(
+                    make_body(lr), (params, opt_state, err),
+                    (batch_idx, batch_w))
+                return params, opt_state, err, losses
+
+            # the per-pod error-feedback residuals join the donated carry
+            self._run = jax.jit(run, donate_argnums=(0, 1, 2))
 
         act_shard = self.act_shard
 
@@ -254,52 +426,99 @@ class EpochEngine:
 
         self._validate = jax.jit(val_mean)
 
-        def run_chunk(params, opt_state, val_dev, batch_idx, batch_w,
-                      lr, prev_loss):
-            """batch_idx/batch_w: (n_epochs, n_steps, batch_units).  The
-            whole chunk — epochs, validations, newbob updates — is one
-            dispatch; metrics are accumulated in the scan ys and fetched
-            once by the caller."""
-            self.n_epoch_traces += 1
-            params, opt_state = self._constrain_state(params, opt_state)
+        if pod is None:
+            def run_chunk(params, opt_state, val_dev, batch_idx, batch_w,
+                          lr, prev_loss):
+                """batch_idx/batch_w: (n_epochs, n_steps, batch_units).
+                The whole chunk — epochs, validations, newbob updates —
+                is one dispatch; metrics are accumulated in the scan ys
+                and fetched once by the caller."""
+                self.n_epoch_traces += 1
+                params, opt_state = self._constrain_state(params, opt_state)
 
-            def epoch(carry, xs):
-                p, s, lr_c, prev = carry
-                idx, w = xs
-                (p, s), losses = jax.lax.scan(make_body(lr_c), (p, s),
-                                              (idx, w))
-                if val_dev is not None:
-                    vl = val_mean(p, val_dev)
-                    lr_n, prev = newbob_step(
-                        lr_c, prev, vl, cfg.anneal_factor,
-                        cfg.improvement_threshold)
-                else:
-                    vl = jnp.float32(jnp.nan)
-                    lr_n = lr_c
-                return (p, s, lr_n, prev), (losses, vl, lr_n)
+                def epoch(carry, xs):
+                    p, s, lr_c, prev = carry
+                    idx, w = xs
+                    (p, s), losses = jax.lax.scan(make_body(lr_c), (p, s),
+                                                  (idx, w))
+                    if val_dev is not None:
+                        vl = val_mean(p, val_dev)
+                        lr_n, prev = newbob_step(
+                            lr_c, prev, vl, cfg.anneal_factor,
+                            cfg.improvement_threshold)
+                    else:
+                        vl = jnp.float32(jnp.nan)
+                        lr_n = lr_c
+                    return (p, s, lr_n, prev), (losses, vl, lr_n)
 
-            (params, opt_state, lr, prev_loss), (losses, vls, lrs) = \
-                jax.lax.scan(epoch, (params, opt_state, lr, prev_loss),
-                             (batch_idx, batch_w))
-            return params, opt_state, losses, vls, lrs, lr, prev_loss
+                (params, opt_state, lr, prev_loss), (losses, vls, lrs) = \
+                    jax.lax.scan(epoch, (params, opt_state, lr, prev_loss),
+                                 (batch_idx, batch_w))
+                return params, opt_state, losses, vls, lrs, lr, prev_loss
 
-        self._run_chunk = jax.jit(run_chunk, donate_argnums=(0, 1))
+            self._run_chunk = jax.jit(run_chunk, donate_argnums=(0, 1))
+        else:
+            def run_chunk(params, opt_state, err, val_dev, batch_idx,
+                          batch_w, lr, prev_loss):
+                """Pod-mode chunk: identical dispatch shape, with the
+                per-pod error-feedback residuals threaded through the
+                outer epoch carry next to (params, opt_state)."""
+                self.n_epoch_traces += 1
+                params, opt_state = self._constrain_state(params, opt_state)
+                err = self._constrain_err(err)
+
+                def epoch(carry, xs):
+                    p, s, e, lr_c, prev = carry
+                    idx, w = xs
+                    (p, s, e), losses = jax.lax.scan(make_body(lr_c),
+                                                     (p, s, e), (idx, w))
+                    if val_dev is not None:
+                        vl = val_mean(p, val_dev)
+                        lr_n, prev = newbob_step(
+                            lr_c, prev, vl, cfg.anneal_factor,
+                            cfg.improvement_threshold)
+                    else:
+                        vl = jnp.float32(jnp.nan)
+                        lr_n = lr_c
+                    return (p, s, e, lr_n, prev), (losses, vl, lr_n)
+
+                (params, opt_state, err, lr, prev_loss), \
+                    (losses, vls, lrs) = jax.lax.scan(
+                        epoch, (params, opt_state, err, lr, prev_loss),
+                        (batch_idx, batch_w))
+                return (params, opt_state, err, losses, vls, lrs, lr,
+                        prev_loss)
+
+            self._run_chunk = jax.jit(run_chunk, donate_argnums=(0, 1, 2))
 
     # -- mesh placement helpers ----------------------------------------
     def _place_units(self, units):
+        # units stay sharded over `data` only, replicated across pods —
+        # combined (pod, data) placement makes the in-scan unit gather
+        # (and the vmapped validation) fall into XLA:SPMD full-remat
+        # fallbacks on the host backend; the per-pod compute split
+        # happens on the *gathered batch* instead (_constrain_batch +
+        # make_step_core.split_pods)
         place = _data_sharded_put(self.mesh, self.data_axis)
         return {k: place(jnp.asarray(v)) for k, v in units.items()}
 
     def _constrain_batch(self, batch):
         """Shard the gathered batch's example axis over ``data`` (when
         divisible) — the step's per-shard loss/grad terms then reduce
-        with a GSPMD mean-psum across the axis."""
+        with a GSPMD mean-psum across the axis.  In pod mode the example
+        axis spans ``(pod, data)`` jointly; the pod step then splits it
+        into per-pod slices (``make_step_core``) without moving data."""
         if self.mesh is None:
             return batch
-        size = self.mesh.shape[self.data_axis]
+        if self._pod is not None:
+            axes_t: Tuple[str, ...] = (self.pod_axis, self.data_axis)
+        else:
+            axes_t = (self.data_axis,)
+        size = int(np.prod([self.mesh.shape[a] for a in axes_t]))
+        spec_ax = axes_t if len(axes_t) > 1 else axes_t[0]
 
         def con(v):
-            ax = self.data_axis if v.shape[0] % size == 0 else None
+            ax = spec_ax if v.shape[0] % size == 0 else None
             return jax.lax.with_sharding_constraint(
                 v, NamedSharding(self.mesh,
                                  P(ax, *([None] * (v.ndim - 1)))))
@@ -320,6 +539,44 @@ class EpochEngine:
         mirror the params tree, so the same key-path rules apply)."""
         return self.spec.to_shardings(self.spec.param_specs(tree))
 
+    def err_shardings(self, tree):
+        """NamedShardings for the per-pod error-feedback state: each leaf
+        mirrors a param with a leading ``n_pods`` dim, so its spec is
+        ``P(pod, *param_fsdp_spec)`` — pod-local residuals, FSDP-sliced
+        like the param they track."""
+        flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+        shs = [NamedSharding(self.mesh, P(
+            self.pod_axis,
+            *self.spec.param_spec(jax.tree_util.keystr(p), l.shape[1:])))
+            for p, l in flat]
+        return jax.tree_util.tree_unflatten(tdef, shs)
+
+    def _constrain_err(self, err):
+        if err is None or self.mesh is None:
+            return err
+        return jax.tree.map(jax.lax.with_sharding_constraint, err,
+                            self.err_shardings(err))
+
+    # -- compression state ---------------------------------------------
+    @property
+    def uses_error_feedback(self) -> bool:
+        """True when the engine carries per-pod top-k residuals that must
+        be checkpointed next to (params, opt_state) for exact resume."""
+        return self._pod is not None and self._pod.mode == "topk"
+
+    def init_compress_state(self, params):
+        """Fresh zero error-feedback state, pod-sharded on the mesh;
+        None unless the engine compresses with error feedback."""
+        if not self.uses_error_feedback:
+            return None
+        err = init_error_state(params, n_pods=self.n_pods)
+        return jax.device_put(err, self.err_shardings(err))
+
+    def _ensure_compress_state(self, params):
+        if self.uses_error_feedback and self.compress_state is None:
+            self.compress_state = self.init_compress_state(params)
+        return self.compress_state
+
     def shard_state(self, params, opt_state):
         """Bring a freshly-initialized carry onto the mesh with the
         engine's FSDP/TP shardings (identity without a mesh)."""
@@ -331,9 +588,15 @@ class EpochEngine:
     def restore_sharding(self, path: str, arr):
         """``checkpoint.restore(sharding_fn=...)`` hook: reshard a
         restored leaf onto this engine's mesh — elastic restore across
-        mesh shapes (DESIGN.md §5).  Returns None without a mesh."""
+        mesh shapes (DESIGN.md §5).  Returns None without a mesh.
+        Error-feedback leaves (checkpoint key ``err``) carry a leading
+        pod dim and reshard to ``P(pod, *param_spec)``."""
         if self.mesh is None:
             return None
+        if self._pod is not None and "['err']" in path:
+            return NamedSharding(self.mesh, P(
+                self.pod_axis,
+                *self.spec.param_spec(path, tuple(np.shape(arr))[1:])))
         return NamedSharding(self.mesh,
                              self.spec.param_spec(path, np.shape(arr)))
 
@@ -402,10 +665,17 @@ class EpochEngine:
         with ``losses`` of shape ``(n_steps,)`` — padding steps report 0
         and must be masked out of aggregates with ``plan_live_steps``.
         The passed params/opt_state buffers are donated (see class
-        docstring)."""
+        docstring); in pod mode the engine-held ``compress_state`` is
+        donated and replaced alongside them."""
         batch_idx, batch_w = plan
-        return self._run(params, opt_state, batch_idx, batch_w,
-                         jnp.asarray(lr, jnp.float32))
+        if self._pod is None:
+            return self._run(params, opt_state, batch_idx, batch_w,
+                             jnp.asarray(lr, jnp.float32))
+        err = self._ensure_compress_state(params)
+        params, opt_state, self.compress_state, losses = self._run(
+            params, opt_state, err, batch_idx, batch_w,
+            jnp.asarray(lr, jnp.float32))
+        return params, opt_state, losses
 
     def run_epochs(self, params, opt_state, lr, prev_loss,
                    plans: Sequence[Tuple[jax.Array, jax.Array]]):
@@ -430,10 +700,18 @@ class EpochEngine:
         # stack preserves placement, so no second transfer is needed
         batch_idx = jnp.stack([p[0] for p in plans])
         batch_w = jnp.stack([p[1] for p in plans])
-        return self._run_chunk(params, opt_state, self.val_units,
-                               batch_idx, batch_w,
-                               jnp.asarray(lr, jnp.float32),
-                               jnp.asarray(prev_loss, jnp.float32))
+        if self._pod is None:
+            return self._run_chunk(params, opt_state, self.val_units,
+                                   batch_idx, batch_w,
+                                   jnp.asarray(lr, jnp.float32),
+                                   jnp.asarray(prev_loss, jnp.float32))
+        err = self._ensure_compress_state(params)
+        (params, opt_state, self.compress_state, losses, vls, lrs, lr_out,
+         prev_out) = self._run_chunk(params, opt_state, err, self.val_units,
+                                     batch_idx, batch_w,
+                                     jnp.asarray(lr, jnp.float32),
+                                     jnp.asarray(prev_loss, jnp.float32))
+        return params, opt_state, losses, vls, lrs, lr_out, prev_out
 
     def validate(self, params) -> float:
         """Mean per-unit validation loss as one vmapped call (NaN when the
@@ -451,9 +729,11 @@ class HostEngine:
     byte-identical to the scanned engine's by construction (DESIGN.md
     §1).  With a mesh, only the *selection* units are sharded (the SGD
     step itself stays single-device — sharded training is the scan
-    engine's job)."""
+    engine's job; pod-axis gradient compression is likewise scan-only)."""
 
     kind = "host"
+    uses_error_feedback = False
+    compress_state = None
 
     def __init__(self, bundle, cfg: TrainConfig,
                  units: Dict[str, Any],
@@ -461,6 +741,11 @@ class HostEngine:
                  batch_units: int = 1,
                  mesh=None, data_axis: str = "data",
                  spec_mode: str = "tp"):
+        if cfg.compress_mode != "none":
+            raise ValueError(
+                f"compress_mode={cfg.compress_mode!r} is scan-engine-only "
+                f"(the host loop trains dense on one device); use "
+                f"engine='scan' with a data x {cfg.pod_axis} mesh")
         self.bundle = bundle
         self.cfg = cfg
         self.batch_units = int(batch_units)
@@ -536,7 +821,10 @@ class HostEngine:
 
 def _data_sharded_put(mesh, data_axis: str):
     """Leading-axis ``data`` placement for unit trees (replicated when
-    the dim doesn't divide; plain device arrays without a mesh)."""
+    the dim doesn't divide; plain device arrays without a mesh).  Pod
+    engines deliberately keep units here too — pod-replicated — and
+    split compute on the gathered batch instead (see
+    ``EpochEngine._place_units``)."""
     if mesh is None:
         return jnp.asarray
     size = mesh.shape[data_axis]

@@ -157,11 +157,39 @@ def train_with_selection(
     start_epoch = 0
     mesh_shape = (dict(zip(mesh.axis_names, mesh.devices.shape))
                   if mesh is not None else None)
+    # pod-axis compression: per-pod top-k error-feedback residuals ride
+    # the checkpoint tree (key "err") so a resumed run continues from the
+    # exact residuals, not fresh zeros (DESIGN.md §5)
+    uses_err = getattr(eng, "uses_error_feedback", False)
+    # pod-mode engines record their compressor in every manifest (also
+    # for the stateless none/bf16 modes), so a resume under a different
+    # mode is flagged and a same-mode resume stays silent
+    pod_mode = getattr(eng, "pod_axis", None) is not None
     if resume and ckpt_dir and ckpt_mod.latest_step(ckpt_dir) is not None:
+        # peek at the manifest first: a checkpoint written without
+        # error-feedback state (different compress_mode) must restore
+        # gracefully with fresh zero residuals, not KeyError on a
+        # template leaf the archive never had
+        peek = ckpt_mod.read_manifest(ckpt_dir)
+        saved_cm = peek.get("compress_mode")
+        if (saved_cm or "none") != tc.compress_mode:
+            log_fn(f"warning: checkpoint was written with compress_mode="
+                   f"{saved_cm or 'none'!r}, resuming with "
+                   f"{tc.compress_mode!r}")
+        has_err = any("'err'" in k for k in peek["arrays"])
         tmpl = {"params": params, "opt": opt_state}
+        if uses_err and has_err:
+            # shapes/dtypes only — restore replaces every leaf from the
+            # archive, so don't allocate a device-resident zero tree
+            tmpl["err"] = jax.eval_shape(eng.init_compress_state, params)
         loaded, manifest = ckpt_mod.restore(
             ckpt_dir, template=tmpl, sharding_fn=eng.restore_sharding)
         params, opt_state = loaded["params"], loaded["opt"]
+        if uses_err and has_err:
+            eng.compress_state = loaded["err"]
+        elif uses_err:
+            log_fn("warning: no error-feedback state in checkpoint; "
+                   "top-k residuals restart from zero")
         start_epoch = manifest["extra"]["epoch"] + 1
         newbob = NewbobState(manifest["extra"]["lr"],
                              manifest["extra"]["prev_loss"])
@@ -324,9 +352,15 @@ def train_with_selection(
                          "sel_weights": (np.asarray(
                              selection.weights).tolist()
                              if selection is not None else None)}
-                ckpt_mod.save(ckpt_dir, chunk_epochs[-1],
-                              {"params": params, "opt": opt_state}, extra,
-                              mesh_shape=mesh_shape)
+                tree = {"params": params, "opt": opt_state}
+                if uses_err:
+                    tree["err"] = (eng.compress_state
+                                   if eng.compress_state is not None
+                                   else eng.init_compress_state(params))
+                ckpt_mod.save(ckpt_dir, chunk_epochs[-1], tree, extra,
+                              mesh_shape=mesh_shape,
+                              compress_mode=(tc.compress_mode if pod_mode
+                                             else None))
             epoch += chunk
     finally:
         if prefetcher is not None:

@@ -170,6 +170,62 @@ def test_fused_vocab_chunking_invariant():
         assert jnp.allclose(outs[0], o, atol=1e-5)
 
 
+def test_shared_vocab_chunk_layout():
+    """The pad/reshape/validity layout is one shared helper
+    (``core/chunking.py``) consumed by both the fused loss's
+    ``_vocab_chunks`` and ``core/lastlayer.py:streamed_er2`` — asserted
+    here against the layout spec so the convention cannot drift."""
+    from repro.core.chunking import (chunk_vocab_axis, resolve_vocab_chunk,
+                                     vocab_chunk_mask, vocab_chunks)
+    from repro.core.rnnt_loss import _vocab_chunks
+
+    rng = np.random.default_rng(0)
+    J, V, chunk = 5, 17, 4
+    w = jnp.asarray(rng.normal(size=(J, V)), jnp.float32)
+
+    wp, valid = _vocab_chunks(w, chunk)
+    nc = -(-V // chunk)
+    assert wp.shape == (nc, J, chunk) and valid.shape == (nc, chunk)
+    # reassembling the chunks (dropping padded columns) recovers the head
+    back = np.moveaxis(np.asarray(wp), 0, 1).reshape(J, nc * chunk)[:, :V]
+    assert np.array_equal(back, np.asarray(w))
+    # padded tail columns are zero-filled and masked invalid
+    assert np.asarray(wp)[-1, :, V % chunk:].sum() == 0.0
+    want_valid = (np.arange(nc * chunk).reshape(nc, chunk) < V)
+    assert np.array_equal(np.asarray(valid), want_valid)
+
+    # the streamed_er2 orientation: vocab on axis 0 of the projection
+    rv = jnp.asarray(rng.normal(size=(V, 3)), jnp.float32)
+    rvc = chunk_vocab_axis(rv, chunk, axis=0)
+    assert rvc.shape == (nc, chunk, 3)
+    assert np.array_equal(np.asarray(rvc).reshape(nc * chunk, 3)[:V],
+                          np.asarray(rv))
+
+    # chunk resolution: <=0 means one whole-vocab chunk, oversize is
+    # capped (no padding past the vocabulary)
+    assert resolve_vocab_chunk(V, 0) == V
+    assert resolve_vocab_chunk(V, -3) == V
+    assert resolve_vocab_chunk(V, 1000) == V
+    assert resolve_vocab_chunk(V, 4) == 4
+    wp1, valid1 = vocab_chunks(w, V, axis=1)
+    assert wp1.shape == (1, J, V) and bool(valid1.all())
+    assert np.array_equal(np.asarray(vocab_chunk_mask(V, V)),
+                          np.ones((1, V), bool))
+
+    # both consumers produce identical values through the shared layout:
+    # the fused loss is chunk-invariant and streamed_er2 matches its
+    # dense equivalent at this chunking
+    from repro.core.lastlayer import streamed_er2
+    N, d = 6, J
+    h = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    targets = jnp.asarray(rng.integers(0, V, N), jnp.int32)
+    scale = jnp.asarray(rng.uniform(0.5, 1.5, N), jnp.float32)
+    got = streamed_er2(h, w, targets, scale, rv, chunk=chunk)
+    p = jax.nn.softmax(h @ w, axis=-1)
+    e = (p - jax.nn.one_hot(targets, V)) * scale[:, None]
+    assert np.allclose(np.asarray(got), np.asarray(e @ rv), atol=1e-5)
+
+
 def test_fused_grad_zero_outside_lattice():
     """Frames past t_len contribute nothing — matching the dense oracle's
     masking semantics on the encoder-side factor."""

@@ -5,7 +5,7 @@ PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test-fast test-all bench bench-sharded bench-rnnt bench-compress \
-	docs-check
+	bench-serve docs-check
 
 # fast tier: everything not marked slow (~3-4 min) — the development loop
 test-fast:
@@ -39,6 +39,12 @@ bench-rnnt:
 # on a 4-device subprocess (writes BENCH_compressed_step.json)
 bench-compress:
 	$(PY) -m benchmarks.bench_compressed_step
+
+# just the serving benchmark: continuous batching vs one-shot generate
+# at equal offered load, saturation curve, RNN-T streaming row
+# (writes BENCH_serve.json)
+bench-serve:
+	$(PY) -m benchmarks.bench_serve
 
 # docs integrity: no dangling file refs / make targets / DESIGN.md § cites
 docs-check:

@@ -1,0 +1,204 @@
+"""Serving benchmark: continuous batching vs repeated one-shot
+``generate`` at equal offered load on the LM smoke, plus an RNN-T
+streaming row on the paper's CRDNN smoke.
+
+Workload: requests share one prompt bucket but carry heterogeneous
+decode budgets (4..32 new tokens, no eos) — the regime continuous
+batching exists for.  The one-shot baseline batches ``n_slots``
+requests at a time and must decode every batch to its *longest* budget;
+the slot engine evicts each request the step its budget is met and
+refills the slot from the queue.
+
+Methodology (DESIGN.md §7): variants run interleaved round-by-round,
+the headline is best-of per variant, the speedup is the median of
+per-round ratios (shared containers drift ±30%).  The saturation curve
+offers Poisson-free uniform arrivals at increasing rates (fractions of
+the measured closed-loop capacity) and reports sustained req/s with
+p50/p99 completion latency for both engines.
+
+Writes ``BENCH_serve.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+ARCH = "starcoder2-3b-smoke"
+RNNT_ARCH = "rnnt-crdnn-smoke"
+PROMPT_LEN = 16
+N_SLOTS = 4
+BUDGETS = (4, 8, 16, 32)       # heterogeneous decode budgets per request
+
+
+def _scale():
+    s = os.environ.get("REPRO_BENCH_SCALE", "")
+    if s == "micro":
+        return 8, 2       # n_requests, rounds
+    if s == "small":
+        return 16, 3
+    return 24, 3
+
+
+def _lm_requests(n, vocab, arrivals=None):
+    from repro.serve.engine import Request
+    rng = np.random.default_rng(0)
+    return [
+        Request(uid=i,
+                inputs={"tokens": rng.integers(
+                    0, vocab, (PROMPT_LEN,)).astype(np.int32)},
+                max_new_tokens=BUDGETS[i % len(BUDGETS)],
+                arrival_s=0.0 if arrivals is None else arrivals[i])
+        for i in range(n)
+    ]
+
+
+def _run_oneshot(bundle, params, requests):
+    """Static-batching baseline: serve arrivals in admission-order groups
+    of ``N_SLOTS``; each batch decodes to its longest budget.  Returns
+    per-request completion latencies (vs arrival) and the wall time."""
+    import jax.numpy as jnp
+    from repro.serve.engine import generate
+    pending = sorted(requests, key=lambda r: (r.arrival_s, r.uid))
+    lat = []
+    t0 = time.time()
+    i = 0
+    while i < len(pending):
+        group = pending[i: i + N_SLOTS]
+        i += N_SLOTS
+        wait = group[0].arrival_s - (time.time() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        # the whole batch decodes max(budget) steps — the static-batching tax
+        prompts = jnp.stack([jnp.asarray(r.inputs["tokens"]) for r in group])
+        new = max(r.max_new_tokens for r in group)
+        generate(bundle, params, prompts, new, eos_id=None)
+        done = time.time() - t0
+        lat.extend(done - r.arrival_s for r in group)
+    return lat, time.time() - t0
+
+
+def _run_cb(engine, requests):
+    t0 = time.time()
+    comps = engine.run(requests)
+    wall = time.time() - t0
+    return [c.latency_s for c in comps], wall
+
+
+def _pctl(xs, q):
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def bench_serve(write_json: bool = True) -> List[Dict]:
+    import jax
+    from repro.configs import get_config
+    from repro.models.api import build_model
+    from repro.serve.engine import Request, SlotEngine
+
+    n_req, rounds = _scale()
+    cfg = get_config(ARCH)
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    engine = SlotEngine(bundle, params, n_slots=N_SLOTS,
+                        max_new_tokens=max(BUDGETS),
+                        max_prompt_len=PROMPT_LEN, eos_id=None,
+                        sync_every=4)
+    reqs = _lm_requests(n_req, cfg.vocab_size)
+
+    # warm both variants (compile prefill/decode executables)
+    _run_cb(engine, _lm_requests(N_SLOTS, cfg.vocab_size))
+    _run_oneshot(bundle, params, _lm_requests(N_SLOTS, cfg.vocab_size))
+
+    # -- head-to-head at equal offered load (everything queued at t=0) --
+    cb_rps, os_rps = [], []
+    for _ in range(rounds):                     # interleaved rounds (§7)
+        _, wall = _run_cb(engine, reqs)
+        cb_rps.append(n_req / wall)
+        _, wall = _run_oneshot(bundle, params, reqs)
+        os_rps.append(n_req / wall)
+    speedup = float(np.median([c / o for c, o in zip(cb_rps, os_rps)]))
+
+    rows = [
+        {"name": "serve/cb_closed_loop", "us_per_call": 1e6 / max(cb_rps),
+         "derived": f"req_per_s={max(cb_rps):.2f}"},
+        {"name": "serve/oneshot_closed_loop",
+         "us_per_call": 1e6 / max(os_rps),
+         "derived": f"req_per_s={max(os_rps):.2f}"},
+        {"name": "serve/cb_over_oneshot", "us_per_call": 0.0,
+         "derived": f"req_per_s_ratio={speedup:.2f}x"},
+    ]
+    record = {
+        "time": time.time(), "arch": ARCH, "n_requests": n_req,
+        "n_slots": N_SLOTS, "prompt_len": PROMPT_LEN,
+        "budgets": list(BUDGETS),
+        "cb_req_per_s_best": round(max(cb_rps), 3),
+        "oneshot_req_per_s_best": round(max(os_rps), 3),
+        "cb_over_oneshot_req_per_s": round(speedup, 3),
+    }
+
+    # -- saturation curve: uniform arrivals at fractions of capacity ----
+    cap = max(cb_rps)
+    curve = []
+    for frac in (0.5, 0.8, 1.0, 1.3):
+        rate = cap * frac
+        arrivals = [i / rate for i in range(n_req)]
+        point = {"offered_req_per_s": round(rate, 3)}
+        for tag, run in (("cb", lambda rq: _run_cb(engine, rq)),
+                         ("oneshot",
+                          lambda rq: _run_oneshot(bundle, params, rq))):
+            lat, wall = run(_lm_requests(n_req, cfg.vocab_size, arrivals))
+            point[tag] = {
+                "sustained_req_per_s": round(n_req / wall, 3),
+                "p50_latency_ms": round(1e3 * _pctl(lat, 50), 1),
+                "p99_latency_ms": round(1e3 * _pctl(lat, 99), 1),
+            }
+            rows.append({
+                "name": f"serve/{tag}@{frac:.1f}x", "us_per_call": 0.0,
+                "derived": (f"sustained={point[tag]['sustained_req_per_s']}"
+                            f"rps;p50={point[tag]['p50_latency_ms']}ms;"
+                            f"p99={point[tag]['p99_latency_ms']}ms")})
+        curve.append(point)
+    record["saturation"] = curve
+
+    # -- RNN-T streaming row on the paper workload ----------------------
+    rcfg = get_config(RNNT_ARCH)
+    rbundle = build_model(rcfg)
+    rparams = rbundle.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    rreqs = [Request(uid=i,
+                     inputs={"feats": rng.normal(size=(
+                         int(rng.integers(24, 49)),
+                         rcfg.rnnt.n_feats)).astype(np.float32)},
+                     max_new_tokens=64)
+             for i in range(2 * N_SLOTS)]
+    rengine = SlotEngine(rbundle, rparams, n_slots=N_SLOTS,
+                         max_new_tokens=64, max_prompt_len=48,
+                         sync_every=4)
+    _run_cb(rengine, rreqs[:N_SLOTS])           # warm
+    t0 = time.time()
+    comps = rengine.run(rreqs)
+    wall = time.time() - t0
+    syms = sum(len(c.tokens) for c in comps)
+    rows.append({"name": "serve/rnnt_streaming", "us_per_call":
+                 1e6 * wall / len(rreqs),
+                 "derived": f"req_per_s={len(rreqs)/wall:.2f};"
+                            f"sym_per_s={syms/wall:.1f}"})
+    record["rnnt_req_per_s"] = round(len(rreqs) / wall, 3)
+    record["rnnt_sym_per_s"] = round(syms / wall, 1)
+
+    if write_json:
+        out = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_serve.json")
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    for r in bench_serve():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

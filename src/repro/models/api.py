@@ -112,14 +112,38 @@ def _build_lm(cfg: ModelConfig) -> ModelBundle:
         return (params["embed"]["w"].T if cfg.tie_embeddings
                 else params["lm_head"]["w"])
 
-    def prefill(params, batch, shard=IDENTITY_SHARDER, cache_len=None):
+    def prefill(params, batch, shard=IDENTITY_SHARDER, cache_len=None,
+                prompt_lens=None):
+        """Prefill the decode cache.  With ``prompt_lens`` (B,) the prompt
+        is treated as right-padded to its bucket length: pad positions get
+        position id -1, which every attention mask rule treats as invalid
+        (``attention._valid``), so the returned last-token logits and the
+        cache contents are bit-identical to an unpadded prefill of the
+        live prefix — the retrace-free bucketed-prompt contract of the
+        serving engine (DESIGN.md §4)."""
         x, _, _ = assemble(params, batch)
         S_total = x.shape[1]
         cache_len = cache_len or S_total
+        if prompt_lens is None:
+            h, _, cache = tfm.forward_hidden(
+                params, cfg, x, mask_fn=mask_fn, shard=shard, remat=False,
+                collect_cache=True, cache_len=cache_len)
+            logits = tfm.unembed(params, cfg, h[:, -1:])
+            return logits[:, 0], cache
+        if is_vlm:
+            raise NotImplementedError(
+                "bucketed (prompt_lens) prefill is text-LM only; VLM "
+                "prompts carry a fixed patch prefix")
+        B = x.shape[0]
+        pos = jnp.broadcast_to(jnp.arange(S_total), (B, S_total))
+        pos = jnp.where(pos < prompt_lens[:, None], pos, -1)
         h, _, cache = tfm.forward_hidden(
-            params, cfg, x, mask_fn=mask_fn, shard=shard, remat=False,
-            collect_cache=True, cache_len=cache_len)
-        logits = tfm.unembed(params, cfg, h[:, -1:])
+            params, cfg, x, positions=pos, mask_fn=mask_fn, shard=shard,
+            remat=False, collect_cache=True, cache_len=cache_len)
+        last = jnp.clip(prompt_lens - 1, 0, S_total - 1)
+        h_last = jnp.take_along_axis(
+            h, last[:, None, None].astype(jnp.int32), axis=1)
+        logits = tfm.unembed(params, cfg, h_last)
         return logits[:, 0], cache
 
     def decode(params, cache, tokens, shard=IDENTITY_SHARDER):
@@ -369,10 +393,73 @@ def _build_rnnt(cfg: ModelConfig) -> ModelBundle:
             "weights": jnp.ones((B,), jnp.float32),
         }
 
-    def _no_serve(*a, **k):
-        raise NotImplementedError(
-            "RNN-T serving uses greedy transducer search "
-            "(examples/train_asr_pgm.py); not part of the LM serve API")
+    # -- streaming greedy transducer serve hooks (DESIGN.md §4) --------
+    # The LM serve contract maps onto the transducer search: "prefill"
+    # runs the CRDNN encoder once and seeds the blank-start prediction
+    # state; "decode" is one *joint step* — it consumes the previously
+    # sampled symbol (blank advances the frame cursor, a label advances
+    # the prediction GRU) and returns the next joint logits.  The cache
+    # is the per-utterance decode state: the encoder output buffer, the
+    # frame cursor/limit, the prediction-net state and the
+    # symbols-emitted-this-frame counter (the per-frame emission cap is
+    # enforced by forcing blank logits once the cap is hit, which is
+    # exactly where the non-streaming reference breaks its inner loop).
+
+    def rnnt_prefill(params, batch, shard=IDENTITY_SHARDER, cache_len=None,
+                     max_symbols: int = 8):
+        feats = batch["feats"]
+        enc = rnnt_mod.encode(params, cfg, feats)
+        B, T_enc, _ = enc.shape
+        t_len = jnp.minimum(_t_lens(batch), T_enc).astype(jnp.int32)
+        g, h = rnnt_mod.pred_start(params, cfg, B, dtype=enc.dtype)
+        logits = rnnt_mod.joint_step(params, enc[:, 0], g)
+        cache = {
+            "enc": enc,
+            "t": jnp.zeros((B,), jnp.int32),
+            "t_len": t_len,
+            "g": g,
+            "h": h,
+            "syms": jnp.zeros((B,), jnp.int32),
+            "max_syms": jnp.full((B,), max_symbols, jnp.int32),
+        }
+        return logits, cache
+
+    def rnnt_decode(params, cache, tokens, shard=IDENTITY_SHARDER):
+        """tokens: (B,) the symbol sampled from the previous logits."""
+        blank = tokens == rnnt_mod.BLANK_ID
+        g_new, h_new = rnnt_mod.pred_step(params, cfg, tokens, cache["h"])
+        g = jnp.where(blank[:, None], cache["g"], g_new)
+        h = jnp.where(blank[:, None], cache["h"], h_new)
+        t = cache["t"] + blank.astype(jnp.int32)
+        syms = jnp.where(blank, 0, cache["syms"] + 1)
+        T_enc = cache["enc"].shape[1]
+        t_idx = jnp.clip(t, 0, T_enc - 1)
+        enc_t = jnp.take_along_axis(
+            cache["enc"], t_idx[:, None, None], axis=1)[:, 0]
+        logits = rnnt_mod.joint_step(params, enc_t, g)
+        # per-frame emission cap: force blank so greedy search advances —
+        # the same place the reference inner loop stops (DESIGN.md §4)
+        forced = jnp.full_like(logits, -1e30)
+        forced = forced.at[:, rnnt_mod.BLANK_ID].set(0.0)
+        logits = jnp.where((syms >= cache["max_syms"])[:, None],
+                           forced, logits)
+        cache = dict(cache, t=t, g=g, h=h, syms=syms)
+        return logits, cache
+
+    def rnnt_init_cache(batch_size: int, cache_len: int, dtype=None,
+                        max_symbols: int = 8):
+        """Zero decode state; ``cache_len`` is the *encoder-frame*
+        capacity (audio frames // time_reduction)."""
+        dtype = jnp.float32 if dtype is None else dtype
+        return {
+            "enc": jnp.zeros((batch_size, cache_len, r.dnn_dim), dtype),
+            "t": jnp.zeros((batch_size,), jnp.int32),
+            "t_len": jnp.zeros((batch_size,), jnp.int32),
+            "g": jnp.zeros((batch_size, r.pred_hidden), dtype),
+            "h": jnp.zeros((batch_size, r.pred_hidden), dtype),
+            "syms": jnp.zeros((batch_size,), jnp.int32),
+            "max_syms": jnp.full((batch_size,), max_symbols, jnp.int32),
+        }
 
     return ModelBundle(
         cfg=cfg,
@@ -381,9 +468,9 @@ def _build_rnnt(cfg: ModelConfig) -> ModelBundle:
         loss_fn=loss_fn,
         final_hidden=hidden,
         head_weight=head_weight,
-        prefill=_no_serve,
-        decode=_no_serve,
-        init_cache=_no_serve,
+        prefill=rnnt_prefill,
+        decode=rnnt_decode,
+        init_cache=rnnt_init_cache,
         input_specs=input_specs,
         make_batch=make_batch,
     )

@@ -275,9 +275,16 @@ def cache_write(cache, k_new, v_new, pos_new):
 
 
 def cache_prefill(cache, k_all, v_all, pos_all):
-    """Bulk-fill after prefill: keeps the last L positions."""
+    """Bulk-fill after prefill: keeps the last L positions.
+
+    ``t`` (the next decode position) is derived from the *positions*, not
+    the buffer length: with natural positions ``max(pos)+1 == S``, and a
+    right-padded bucketed prompt (pads carry pos -1, serve/engine.py)
+    resumes decode at the true prompt length, writing over the invalid
+    pad slots first."""
     L = cache["k"].shape[1]
     S = k_all.shape[1]
+    t_next = (jnp.max(pos_all) + 1).astype(jnp.int32)
     if S >= L:
         # keep last L positions, placed at their natural ring slots
         # (position p -> slot p % L) so subsequent writes evict oldest-first
@@ -286,11 +293,11 @@ def cache_prefill(cache, k_all, v_all, pos_all):
         return {"k": sl(k_all).astype(cache["k"].dtype),
                 "v": sl(v_all).astype(cache["v"].dtype),
                 "pos": sl(pos_all).astype(jnp.int32),
-                "t": jnp.asarray(S, jnp.int32)}
+                "t": t_next}
     k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_all.astype(cache["k"].dtype), 0, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_all.astype(cache["v"].dtype), 0, axis=1)
     pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos_all.astype(jnp.int32), 0, axis=1)
-    return {"k": k, "v": v, "pos": pos, "t": jnp.asarray(S, jnp.int32)}
+    return {"k": k, "v": v, "pos": pos, "t": t_next}
 
 
 def attn_decode(

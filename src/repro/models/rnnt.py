@@ -80,6 +80,13 @@ def gru_step(p, x_t, h):
     return y[:, 0], h_new
 
 
+#: Transducer blank symbol.  Training reserves id 0 for blank/pad
+#: everywhere (``data/synthetic.py`` samples labels from ``[1, V)``;
+#: ``core/rnnt_loss.py`` scores the blank arc on column 0), so decoding
+#: uses the same convention.
+BLANK_ID = 0
+
+
 # ---------------------------------------------------------------------------
 # RNN-T model
 # ---------------------------------------------------------------------------
@@ -160,6 +167,39 @@ def joint_factors(params, cfg, feats, tokens):
     ze = enc @ params["joint"]["w_enc"].astype(dt)        # (B,T,J)
     zp = pred @ params["joint"]["w_pred"].astype(dt)      # (B,U1,J)
     return ze, zp
+
+
+def pred_step(params, cfg, tokens, h):
+    """One prediction-network step for streaming greedy decode.
+
+    ``tokens``: (B,) int32 — the symbol just emitted; any id < 0 means
+    the blank-start state (a zero embedding, exactly what ``predict``
+    feeds at position 0 via its left pad).  ``h``: (B, pred_hidden) GRU
+    state.  Returns ``(g (B, pred_hidden), h_new)`` — feeding the label
+    sequence through this step token by token reproduces ``predict``'s
+    rows exactly (tests/test_serve_engine.py).
+    """
+    emb = jnp.take(params["pred_embed"]["w"], jnp.maximum(tokens, 0), axis=0)
+    emb = jnp.where((tokens >= 0)[:, None], emb, 0.0)
+    return gru_step(params["pred_gru"], emb, h)
+
+
+def pred_start(params, cfg, batch_size: int, dtype=jnp.float32):
+    """Blank-start prediction state: ``(g0, h0)`` — what ``predict``
+    produces at u=0 before any label is consumed."""
+    r = cfg.rnnt
+    h0 = jnp.zeros((batch_size, r.pred_hidden), dtype)
+    return pred_step(params, cfg, jnp.full((batch_size,), -1, jnp.int32), h0)
+
+
+def joint_step(params, enc_t, g):
+    """Joint network at one (frame, pred-state) point: ``enc_t``
+    (B, dnn_dim), ``g`` (B, pred_hidden) -> logits (B, V).  Identical
+    math to one (t, u) cell of ``joint_hidden`` + ``joint_logits``."""
+    dt = enc_t.dtype
+    ze = enc_t @ params["joint"]["w_enc"].astype(dt)
+    zp = g @ params["joint"]["w_pred"].astype(dt)
+    return jnp.tanh(ze + zp) @ params["joint"]["w_out"].astype(dt)
 
 
 def joint_hidden(params, enc, pred):

@@ -1,0 +1,220 @@
+"""Serving-path tests (DESIGN.md §4): the three seed `generate` bug
+regressions (first-token eos, live-token accounting, k-step termination
+sync), sampling/determinism contracts, continuous-batching slot-reuse
+parity against one-shot `generate`, and RNN-T streaming greedy decode
+against the non-streaming reference on the CRDNN smoke."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serve.engine import (Request, SlotEngine, generate,
+                                rnnt_greedy_reference)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("starcoder2-3b-smoke")
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+@pytest.fixture(scope="module")
+def rnnt():
+    cfg = get_config("rnnt-crdnn-smoke")
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+def _prompts(cfg, B=3, Sp=10, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (B, Sp), 0,
+                              cfg.vocab_size).astype(jnp.int32)
+
+
+def _trim(row, eos):
+    row = [int(t) for t in row]
+    return row[: row.index(eos) + 1] if eos in row else row
+
+
+# ---------------------------------------------------------------------------
+# seed-bug regressions
+# ---------------------------------------------------------------------------
+
+def test_first_token_eos_stops_decode(lm):
+    """Seed bug: `done` ignored the token sampled from prefill logits, so
+    a prompt whose first greedy token is eos still decoded max_new
+    steps."""
+    cfg, bundle, params = lm
+    prompts = _prompts(cfg, B=2)
+    free_run, _ = generate(bundle, params, prompts, 6, eos_id=None)
+    eos = int(free_run[0, 0])
+    toks, stats = generate(bundle, params, prompts[:1], 6, eos_id=eos)
+    assert stats.decode_steps == 0
+    assert stats.decode_tokens == 0
+    assert toks.shape == (1, 1) and int(toks[0, 0]) == eos
+
+
+def test_stats_count_live_decode_tokens_only(lm):
+    """Seed bug: `tokens_out = int(tokens.size)` billed the prefill-
+    sampled token and post-eos eos padding to decode-phase tok/s."""
+    cfg, bundle, params = lm
+    B, new = 3, 7
+    toks, stats = generate(bundle, params, _prompts(cfg, B=B), new,
+                           eos_id=None)
+    assert toks.shape == (B, new)
+    assert stats.prefill_tokens == B                # prefill's token
+    assert stats.decode_tokens == B * (new - 1)     # not B * new
+    assert stats.decode_steps == new - 1
+    assert stats.prompt_tokens == B * 10
+    assert stats.tokens_per_s > 0
+
+    # with eos: tokens emitted after an example finishes are not billed
+    eos = int(toks[0, 2])
+    toks_e, stats_e = generate(bundle, params, _prompts(cfg, B=B), new,
+                               eos_id=eos, sync_every=1)
+    live = 0
+    for row in np.asarray(toks_e):
+        done_at = _trim(row, eos)
+        live += len(done_at) - 1            # first token is prefill's
+    assert stats_e.decode_tokens <= live    # never counts beyond eos
+    assert stats_e.decode_tokens < B * (new - 1)
+
+
+def test_k_step_sync_greedy_outputs_unchanged(lm):
+    """Seed bug: `bool(done.all())` forced a host sync every token.  The
+    k-step check must leave greedy outputs unchanged up to eos."""
+    cfg, bundle, params = lm
+    prompts = _prompts(cfg, B=3)
+    base, _ = generate(bundle, params, prompts, 8, eos_id=None)
+    eos = int(base[1, 3])                   # some mid-stream token
+    per_step, _ = generate(bundle, params, prompts, 8, eos_id=eos,
+                           sync_every=1)
+    k_step, _ = generate(bundle, params, prompts, 8, eos_id=eos,
+                         sync_every=4)
+    for a, b in zip(np.asarray(per_step), np.asarray(k_step)):
+        assert _trim(a, eos) == _trim(b, eos)
+
+
+# ---------------------------------------------------------------------------
+# generate contracts
+# ---------------------------------------------------------------------------
+
+def test_greedy_determinism(lm):
+    cfg, bundle, params = lm
+    prompts = _prompts(cfg)
+    a, _ = generate(bundle, params, prompts, 6)
+    b, _ = generate(bundle, params, prompts, 6)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_temperature_sampling_shape_dtype(lm):
+    cfg, bundle, params = lm
+    toks, _ = generate(bundle, params, _prompts(cfg, B=2), 5,
+                       temperature=0.8, key=jax.random.PRNGKey(7))
+    assert toks.shape == (2, 5)
+    assert toks.dtype == jnp.int32
+    assert (np.asarray(toks) >= 0).all()
+    assert (np.asarray(toks) < cfg.vocab_size).all()
+
+
+def test_generate_rejects_rnnt(rnnt):
+    cfg, bundle, params = rnnt
+    with pytest.raises(ValueError, match="RNN-T"):
+        generate(bundle, params, jnp.zeros((1, 4), jnp.int32), 4)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: slot reuse parity vs one-shot generate
+# ---------------------------------------------------------------------------
+
+def test_slot_engine_lm_parity_with_oneshot(lm):
+    """More requests than slots, mixed prompt lengths across buckets,
+    eos terminations: every completion must equal the one-shot greedy
+    decode of the same prompt, trimmed at eos."""
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(0)
+    lens = [5, 9, 12, 17, 7, 3]
+    eos = 7
+    reqs = [Request(uid=i,
+                    inputs={"tokens": rng.integers(
+                        0, cfg.vocab_size, (L,)).astype(np.int32)},
+                    max_new_tokens=10)
+            for i, L in enumerate(lens)]
+    eng = SlotEngine(bundle, params, n_slots=2, max_new_tokens=10,
+                     max_prompt_len=24, eos_id=eos, sync_every=4)
+    comps = eng.run(reqs)
+    assert len(comps) == len(reqs)
+    assert eng.n_admits == len(reqs)        # slots were reused
+    got = {c.uid: c.tokens for c in comps}
+    for r in reqs:
+        toks, _ = generate(bundle, params,
+                           jnp.asarray(r.inputs["tokens"])[None], 10,
+                           eos_id=eos, sync_every=1)
+        assert got[r.uid] == _trim(np.asarray(toks)[0], eos), r.uid
+
+
+def test_slot_engine_respects_budget_and_bounds(lm):
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(2)
+    reqs = [Request(uid=i,
+                    inputs={"tokens": rng.integers(
+                        0, cfg.vocab_size, (6,)).astype(np.int32)},
+                    max_new_tokens=b)
+            for i, b in enumerate([1, 3, 5])]
+    eng = SlotEngine(bundle, params, n_slots=3, max_new_tokens=8,
+                     max_prompt_len=16, eos_id=None)
+    got = {c.uid: c.tokens for c in eng.run(reqs)}
+    assert [len(got[i]) for i in range(3)] == [1, 3, 5]
+    too_long = Request(uid=9, inputs={"tokens": np.zeros(99, np.int32)},
+                       max_new_tokens=4)
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.run([too_long])
+
+
+# ---------------------------------------------------------------------------
+# RNN-T streaming decode
+# ---------------------------------------------------------------------------
+
+def test_pred_step_matches_predict(rnnt):
+    """Token-by-token prediction-network stepping must reproduce the
+    batch `predict` rows exactly (same GRU, same blank-start state)."""
+    from repro.models import rnnt as rnnt_mod
+    cfg, bundle, params = rnnt
+    toks = jnp.asarray([[3, 9, 1, 14]], jnp.int32)
+    ref = rnnt_mod.predict(params, cfg, toks)
+    g, h = rnnt_mod.pred_start(params, cfg, 1)
+    rows = [g]
+    for u in range(toks.shape[1]):
+        g, h = rnnt_mod.pred_step(params, cfg, toks[:, u], h)
+        rows.append(g)
+    assert np.array_equal(np.asarray(ref), np.asarray(jnp.stack(rows, 1)))
+
+
+def test_rnnt_streaming_matches_reference(rnnt):
+    """Slot-engine streaming greedy transducer decode must match the
+    textbook per-frame host loop token for token.  The reference sees
+    the same bucket-padded feats the engine prefills (the bi-LSTM
+    encoder is bidirectional, so padding participates — exactly as in
+    padded training batches)."""
+    cfg, bundle, params = rnnt
+    F = cfg.rnnt.n_feats
+    rng = np.random.default_rng(1)
+    lens = [40, 25, 48, 33]
+    reqs = [Request(uid=i, inputs={"feats": rng.normal(
+                size=(L, F)).astype(np.float32)}, max_new_tokens=128)
+            for i, L in enumerate(lens)]
+    eng = SlotEngine(bundle, params, n_slots=2, max_new_tokens=128,
+                     max_prompt_len=64, sync_every=4, max_symbols=8)
+    got = {c.uid: c.tokens for c in eng.run(reqs)}
+    for r in reqs:
+        L = r.inputs["feats"].shape[0]
+        bucket = eng.bucket_for(r)
+        feats = np.zeros((1, bucket, F), np.float32)
+        feats[0, :L] = r.inputs["feats"]
+        ref = rnnt_greedy_reference(bundle, params, feats,
+                                    np.asarray([L]), max_symbols=8)[0]
+        assert got[r.uid] == ref, r.uid

@@ -4,8 +4,8 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all bench bench-sharded bench-rnnt bench-compress \
-	bench-serve docs-check
+.PHONY: test-fast test-all test-archs bench bench-sharded bench-rnnt \
+	bench-compress bench-serve bench-archs docs-check
 
 # fast tier: everything not marked slow (~3-4 min) — the development loop
 test-fast:
@@ -18,6 +18,14 @@ test-fast:
 test-all:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 	    $(PY) -m pytest -x -q
+
+# per-arch engine + selection matrix (smokes, host-vs-scan parity, MoE
+# router-term definition, 4-device sharded smokes, resident selection
+# rounds).  No XLA_FLAGS here: the in-process smokes must see the single
+# real CPU device; the sharded smokes force their own device counts in
+# subprocesses.
+test-archs:
+	$(PY) -m pytest -q -m archs tests/test_archs_smoke.py
 
 # paper tables + kernel micro-benchmarks + train-loop / selection-round /
 # sharded-epoch benchmarks (writes BENCH_*.json at the repo root)
@@ -45,6 +53,11 @@ bench-compress:
 # (writes BENCH_serve.json)
 bench-serve:
 	$(PY) -m benchmarks.bench_serve
+
+# just the per-arch scanned-epoch throughput rows, one smoke config per
+# substrate family (writes BENCH_archs.json)
+bench-archs:
+	$(PY) -m benchmarks.bench_archs
 
 # docs integrity: no dangling file refs / make targets / DESIGN.md § cites
 docs-check:

@@ -1,0 +1,85 @@
+"""Per-architecture engine throughput: steady-state scanned-epoch SGD
+steps/sec of ``EpochEngine`` on one smoke config per substrate family —
+the dense-LM baseline plus both MoE archs and both recurrent substrates
+the selection matrix covers (DESIGN.md §8).  One row per arch; writes
+``BENCH_archs.json`` at the repo root so stacked PRs can track how each
+family's epoch hot path moves.
+
+Methodology (DESIGN.md §7): warmup epochs pay compile, the per-arch
+headline is best-of over timed epochs (container CPU drifts on the
+benchmark timescale; there is no cross-engine ratio here, so best-of
+per cell is the whole story).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import numpy as np
+
+ARCHS: Sequence[str] = ("starcoder2-3b", "mixtral-8x7b", "olmoe-1b-7b",
+                        "rwkv6-3b", "recurrentgemma-9b")
+
+
+def bench_archs(archs: Sequence[str] = ARCHS, n_examples: int = 64,
+                seq: int = 8, unit_size: int = 2, epochs: int = 3,
+                warmup_epochs: int = 2) -> List[Dict]:
+    from repro.configs import get_config
+    from repro.configs.base import PGMConfig, TrainConfig
+    from repro.data.pipeline import lm_units
+    from repro.data.synthetic import make_lm_corpus
+    from repro.models.api import build_model
+    from repro.train.engine import EpochEngine
+    from repro.train.optim import make_update_for
+
+    scale = os.environ.get("REPRO_BENCH_SCALE", "")
+    if scale == "micro":
+        n_examples, epochs = max(n_examples // 4, 8), 2
+
+    rows: List[Dict] = []
+    record: Dict = {"time": time.time()}
+    for arch in archs:
+        cfg = get_config(arch + "-smoke")
+        bundle = build_model(cfg)
+        units = lm_units(make_lm_corpus(0, n_examples, seq, cfg.vocab_size,
+                                        hard_fraction=0.4),
+                         unit_size=unit_size)
+        tc = TrainConfig(lr=0.1, optimizer="sgd", epochs=1, pgm=PGMConfig())
+        eng = EpochEngine(bundle, tc, units, batch_units=2)
+        opt_init, _ = make_update_for(tc)
+        params = bundle.init_params(jax.random.PRNGKey(0))
+        opt = opt_init(params)
+
+        def epoch(params, opt, e):
+            params, opt, losses = eng.run_epoch(params, opt, tc.lr,
+                                                eng.full_plan(e))
+            jax.block_until_ready(losses)
+            return params, opt, int(losses.shape[0])
+
+        for e in range(warmup_epochs):
+            params, opt, _ = epoch(params, opt, e)
+        rates = []
+        for e in range(warmup_epochs, warmup_epochs + epochs):
+            t0 = time.time()
+            params, opt, steps = epoch(params, opt, e)
+            rates.append(steps / (time.time() - t0))
+        sps = float(np.max(rates))
+        rows.append({"name": f"archs/{arch}", "us_per_call": 1e6 / sps,
+                     "derived": f"steps_per_s={sps:.1f}",
+                     "steps_per_s": sps})
+        record[f"{arch}_steps_per_s"] = round(sps, 2)
+
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_archs.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    for r in bench_archs():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -89,6 +89,7 @@ def main() -> None:
     run_self_writing_bench("bench_sharded_epoch", "bench_sharded_epoch")
     run_self_writing_bench("bench_compressed_step", "bench_compressed_step")
     run_self_writing_bench("bench_serve", "bench_serve")
+    run_self_writing_bench("bench_archs", "bench_archs")
 
     # roofline table from dry-run artifacts, if the sweep has run
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",

@@ -236,6 +236,13 @@ class PGMConfig:
     sketch_dim_v: int = 64
     use_sketch: bool = True          # False -> paper-faithful exact gradients
     nonneg_weights: bool = True      # clip OMP weights at 0 (GradMatch impl.)
+    # sparse-expert (MoE) selection gradients (DESIGN.md §8): append the
+    # per-unit router-weight gradient (task + load-balance aux) to the
+    # last-layer head representation.  Opt-in — it costs one autodiff
+    # backward per unit vs the closed-form head path; default False is
+    # the paper-faithful last-layer-only definition.  Ignored for
+    # non-MoE families.
+    moe_router_term: bool = False
 
 
 @dataclass(frozen=True)

@@ -14,6 +14,26 @@ This module computes, per selection unit:
 The per-token error scaling matches the training loss exactly:
 per-example mean over tokens, then mean over examples, i.e.
 ``E[b,s] = (softmax - onehot) * mask[b,s] / (n_tok_b * B)``.
+
+Family coverage beyond dense LMs / RNN-T (DESIGN.md §8):
+
+* **Sparse-expert (MoE)** — the last-layer head gradient is blind to the
+  router: two units that stress different experts can sketch identically.
+  With ``PGMConfig.moe_router_term`` the unit representation is the head
+  gradient **concatenated with the per-unit gradient of the total
+  training loss (task + load-balance aux) w.r.t. every router weight**
+  (``moe_router_grads``), sketched per router leaf with the same ``r_h``
+  d-model projection.  The router term costs one autodiff backward per
+  unit (vs the closed-form head path), so it is opt-in; default off is
+  the paper-faithful last-layer definition.
+* **Recurrent carries (RWKV6 ``wkv_scan``, RG-LRU)** — no new gradient
+  term: recurrent state is a per-utterance *activation*, zero-initialized
+  inside every training forward (``final_hidden`` never threads state
+  across units), so the per-unit head gradient is exactly as well-defined
+  as for attention stacks.  The engine test matrix
+  (``tests/test_archs_smoke.py``) proves the state paths through the
+  epoch scan (scan-of-scan) stay host/scan parity-exact, resume
+  bit-exactly, and are untouched by weight-0 padding steps.
 """
 from __future__ import annotations
 
@@ -201,27 +221,96 @@ def rnnt_unit_exact(bundle, params, batch, shard=None) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Sparse-expert (MoE) router-aware gradients (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def moe_router_grads(bundle, params, batch, shard=None):
+    """Per-unit gradients of the total training loss (task + router
+    load-balance aux) w.r.t. every ``router`` weight leaf.
+
+    Returns a list of fp32 arrays shaped like the router leaves (stacked
+    pattern-group routers keep their leading group dim).  One autodiff
+    backward through the full stack per unit — deliberately NOT a
+    closed-form last-layer trick: the router's gradient flows through
+    the top-k combine weights and the aux loss, which is the signal the
+    head gradient cannot see.  Opt-in via ``PGMConfig.moe_router_term``.
+    """
+    from repro.models.common import IDENTITY_SHARDER
+    shard = shard or IDENTITY_SHARDER
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    r_ix = [i for i, (p, _) in enumerate(flat)
+            if "router" in jax.tree_util.keystr(p)]
+    if not r_ix:
+        raise ValueError(
+            f"{bundle.cfg.name}: moe_router_term set but the params tree "
+            f"has no 'router' leaves (family={bundle.cfg.family!r})")
+    leaves = [l for _, l in flat]
+
+    def loss_of_routers(router_leaves):
+        lv = list(leaves)
+        for i, v in zip(r_ix, router_leaves):
+            lv[i] = v.astype(leaves[i].dtype)
+        total, _ = bundle.loss_fn(
+            jax.tree_util.tree_unflatten(tdef, lv), batch, shard=shard)
+        return total
+
+    return jax.grad(loss_of_routers)(
+        [leaves[i].astype(jnp.float32) for i in r_ix])
+
+
+def moe_unit_sketch(bundle, params, batch, proj: Projections,
+                    vocab_chunk: int = 8192, shard=None) -> jax.Array:
+    """Router-aware MoE unit representation: the lm_head sketch
+    concatenated with each router gradient projected through ``r_h`` on
+    its d_model dim (router weights are (..., d, E), so the same
+    projection matrix serves both terms)."""
+    head = lm_unit_sketch(bundle, params, batch, proj, vocab_chunk, shard)
+    rh = proj.r_h.astype(jnp.float32)
+    parts = [jnp.einsum("...de,dk->...ke", g, rh).reshape(-1)
+             for g in moe_router_grads(bundle, params, batch, shard)]
+    return jnp.concatenate([head] + parts)
+
+
+def moe_unit_exact(bundle, params, batch, shard=None) -> jax.Array:
+    """Exact variant: flattened lm_head gradient + raw router gradients."""
+    head = lm_unit_exact(bundle, params, batch, shard)
+    parts = [g.reshape(-1)
+             for g in moe_router_grads(bundle, params, batch, shard)]
+    return jnp.concatenate([head] + parts)
+
+
+# ---------------------------------------------------------------------------
 # Unified entry points
 # ---------------------------------------------------------------------------
 
 def unit_gradient(bundle, params, batch, proj: Optional[Projections],
                   exact: bool = False, vocab_chunk: int = 8192,
-                  shard=None) -> jax.Array:
-    """One selection unit -> gradient representation vector."""
+                  shard=None, router_term: bool = False) -> jax.Array:
+    """One selection unit -> gradient representation vector.
+
+    ``router_term`` (MoE family only) appends the router-logit gradient
+    term to the head-gradient representation — see module docstring and
+    DESIGN.md §8 for the definition and its cost."""
     if bundle.cfg.family == "rnnt":
         return (rnnt_unit_exact(bundle, params, batch, shard) if exact
                 else rnnt_unit_sketch(bundle, params, batch, proj, shard))
+    if router_term and bundle.cfg.family == "moe":
+        return (moe_unit_exact(bundle, params, batch, shard) if exact
+                else moe_unit_sketch(bundle, params, batch, proj,
+                                     vocab_chunk, shard))
     return (lm_unit_exact(bundle, params, batch, shard) if exact
             else lm_unit_sketch(bundle, params, batch, proj, vocab_chunk,
                                 shard))
 
 
 def units_gradients(bundle, params, units, proj: Optional[Projections],
-                    exact: bool = False, vocab_chunk: int = 8192) -> jax.Array:
+                    exact: bool = False, vocab_chunk: int = 8192,
+                    router_term: bool = False) -> jax.Array:
     """units: batch pytree with leading (n_units, ...) axis.
     Returns (n_units, D) fp32.  Sequential lax.map bounds peak memory to a
     single unit's forward pass (the paper's partition rationale)."""
-    fn = lambda u: unit_gradient(bundle, params, u, proj, exact, vocab_chunk)
+    fn = lambda u: unit_gradient(bundle, params, u, proj, exact, vocab_chunk,
+                                 router_term=router_term)
     return jax.lax.map(fn, units)
 
 
@@ -238,7 +327,8 @@ def units_gradients_scanned(bundle, params, units,
                             exact: bool = False,
                             chunk_units: Optional[int] = None,
                             vocab_chunk: int = 8192,
-                            shard=None) -> jax.Array:
+                            shard=None,
+                            router_term: bool = False) -> jax.Array:
     """Family-agnostic batched stage A: scan over unit *chunks*, vmap the
     per-unit gradient representation within a chunk.  Peak memory is
     bounded by ``chunk_units`` forward passes (vs one for the fully
@@ -256,7 +346,7 @@ def units_gradients_scanned(bundle, params, units,
     xs = jax.tree.map(
         lambda a: a.reshape((U // cu, cu) + a.shape[1:]), units)
     fn = lambda u: unit_gradient(bundle, params, u, proj, exact, vocab_chunk,
-                                 shard)
+                                 shard, router_term=router_term)
 
     def chunk_fn(_, cb):
         return None, jax.vmap(fn)(cb)
@@ -269,7 +359,8 @@ def units_gradients_batched(bundle, params, units,
                             proj: Optional[Projections] = None,
                             chunk_units: Optional[int] = None,
                             shard=None, vocab_chunk: int = 8192,
-                            exact: bool = False) -> jax.Array:
+                            exact: bool = False,
+                            router_term: bool = False) -> jax.Array:
     """Batched stage-A gradient representations for resident/distributed
     selection rounds.
 
@@ -287,10 +378,16 @@ def units_gradients_batched(bundle, params, units,
     the projections closed over and every selection round reuses both the
     executable and the device-resident ``proj`` constants.
     """
-    if bundle.cfg.family == "rnnt" or exact:
+    # RNN-T, exact, and router-aware MoE route through the scanned path:
+    # the flattened-example trick below recovers per-unit sketches with a
+    # segment contraction over head factors, which cannot express the
+    # per-unit autodiff router term (one backward per unit is required)
+    if bundle.cfg.family == "rnnt" or exact or \
+            (router_term and bundle.cfg.family == "moe"):
         return units_gradients_scanned(bundle, params, units, proj,
                                        exact=exact, chunk_units=chunk_units,
-                                       vocab_chunk=vocab_chunk, shard=shard)
+                                       vocab_chunk=vocab_chunk, shard=shard,
+                                       router_term=router_term)
     from repro.models.common import IDENTITY_SHARDER
     shard = shard or IDENTITY_SHARDER
     lead = jax.tree.leaves(units)[0].shape

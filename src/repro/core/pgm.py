@@ -132,13 +132,23 @@ def pgm_select(
 ) -> Selection:
     n_units = jax.tree.leaves(units)[0].shape[0]
     exact = not pgm_cfg.use_sketch
+    rt = _router_term_for(bundle, pgm_cfg)
 
-    g = units_gradients(bundle, params, units, proj, exact=exact)
+    g = units_gradients(bundle, params, units, proj, exact=exact,
+                        router_term=rt)
     g_val = None
     if pgm_cfg.val_matching:
-        gv = units_gradients(bundle, params, val_units, proj, exact=exact)
+        gv = units_gradients(bundle, params, val_units, proj, exact=exact,
+                             router_term=rt)
         g_val = _val_target(gv, n_units, pgm_cfg)
     return _stage_b(g, pgm_cfg, g_val=g_val, mesh=mesh, data_axis=data_axis)
+
+
+def _router_term_for(bundle, pgm_cfg) -> bool:
+    """The MoE router-aware term applies only to sparse-expert bundles
+    (DESIGN.md §8); other families silently ignore the flag."""
+    return bool(getattr(pgm_cfg, "moe_router_term", False)
+                and bundle.cfg.family == "moe")
 
 
 class ResidentSelector:
@@ -169,11 +179,12 @@ class ResidentSelector:
         self.mesh = mesh
         self.data_axis = data_axis
         exact = not pgm_cfg.use_sketch
+        rt = _router_term_for(bundle, pgm_cfg)
 
         def stage_a(params, units):
             return units_gradients_batched(
                 bundle, params, units, proj, chunk_units=chunk_units,
-                vocab_chunk=vocab_chunk, exact=exact)
+                vocab_chunk=vocab_chunk, exact=exact, router_term=rt)
 
         # one jit for train and val units alike: the cache keys on unit
         # shapes, so each distinct corpus compiles once and every later

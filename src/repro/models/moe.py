@@ -39,32 +39,43 @@ def init_moe_params(key, d_model: int, moe_cfg, ffn_type: str) -> Dict:
 
 def _topk_dispatch(gates: jax.Array, top_k: int, capacity: int):
     """gates: (G, S, E) softmax probs.  Returns dispatch (G,S,E,C) bf16-able
-    mask and combine (G,S,E,C) weights, plus load-balance aux loss."""
+    mask and combine (G,S,E,C) weights, plus load-balance aux loss.
+
+    Capacity overflow is drop-and-renormalize, deterministically: position
+    bookkeeping runs in int32 — a float cumsum in ``gates.dtype`` loses
+    integer exactness past 256 tokens under bf16, silently multi-filling
+    capacity slots and skewing the gate mean — and a token whose slot
+    overflows is dropped from that expert while its combine weights
+    renormalize over the experts that kept it (weights in fp32, cast back
+    at the end)."""
     G, S, E = gates.shape
     # top-k selection, iteratively to keep position bookkeeping exact
-    remaining = gates
+    remaining = gates.astype(jnp.float32)
     counts = jnp.zeros((G, E), jnp.int32)
     dispatch = jnp.zeros((G, S, E, capacity), gates.dtype)
-    combine = jnp.zeros((G, S, E, capacity), gates.dtype)
-    topk_sum = jnp.zeros((G, S), gates.dtype)
+    combine = jnp.zeros((G, S, E, capacity), jnp.float32)
+    topk_sum = jnp.zeros((G, S), jnp.float32)
     for _ in range(top_k):
         idx = jnp.argmax(remaining, axis=-1)                    # (G,S)
         w = jnp.take_along_axis(remaining, idx[..., None], -1)[..., 0]
-        onehot = jax.nn.one_hot(idx, E, dtype=gates.dtype)      # (G,S,E)
-        pos = counts[:, None, :] + jnp.cumsum(onehot, axis=1).astype(jnp.int32) - 1
-        pos_in_e = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (G,S)
+        onehot_i = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # (G,S,E)
+        pos = counts[:, None, :] + jnp.cumsum(onehot_i, axis=1) - 1
+        pos_in_e = jnp.sum(pos * onehot_i, axis=-1)             # (G,S)
         keep = pos_in_e < capacity
+        # one_hot of the out-of-range index `capacity` is an all-zero row:
+        # dropped tokens contribute to no slot
         pos_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, capacity),
                                 capacity, dtype=gates.dtype)    # (G,S,C)
-        d = onehot[..., None] * pos_oh[:, :, None, :]           # (G,S,E,C)
+        d = onehot_i.astype(gates.dtype)[..., None] * pos_oh[:, :, None, :]
         dispatch = dispatch + d
-        combine = combine + d * w[..., None, None]
-        topk_sum = topk_sum + w * keep.astype(gates.dtype)
-        counts = counts + jnp.sum(onehot * keep[..., None], axis=1).astype(jnp.int32)
-        remaining = remaining * (1.0 - onehot)
-    # renormalize combine weights over the selected experts
+        combine = combine + d.astype(jnp.float32) * w[..., None, None]
+        topk_sum = topk_sum + w * keep.astype(jnp.float32)
+        counts = counts + jnp.sum(onehot_i * keep[..., None].astype(jnp.int32),
+                                  axis=1)
+        remaining = remaining * (1.0 - onehot_i)
+    # renormalize combine weights over the *kept* expert assignments
     combine = combine / jnp.maximum(topk_sum, 1e-9)[..., None, None]
-    return dispatch, combine
+    return dispatch, combine.astype(gates.dtype)
 
 
 def moe_forward(

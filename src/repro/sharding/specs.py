@@ -44,7 +44,17 @@ def _best_axes(dim: int, axes_pref):
 class SpecBuilder:
     """mode:
       'tp'         — FSDP over data axes + tensor parallel over 'model'
-                     (serving, MoE expert-parallel training)
+                     (serving; MoE experts ride the 'model' axis when
+                     divisible)
+      'expert'     — like 'tp', but MoE expert weights shard their
+                     leading n_experts dim over a dedicated ``expert``
+                     mesh axis when the mesh has one, else over the FSDP
+                     data axes (``P(expert-or-fsdp, ...)``), and router
+                     params stay REPLICATED so every shard routes with
+                     identical logits under top-k dispatch.  Expert-dim
+                     indivisibility is a hard ValueError (naming the
+                     arch) instead of a silent fallback — a half-sharded
+                     expert bank trains wrong quietly.
       'fsdp_sp'    — batch over data axes, SEQUENCE over 'model', params
                      fully FSDP (dense-attention training: removes the
                      per-layer TP activation all-reduces; perf iter 4)
@@ -53,7 +63,8 @@ class SpecBuilder:
     """
 
     def __init__(self, mesh, *, fsdp: bool = True, mode: str = "tp",
-                 pod_axis: Optional[str] = None):
+                 pod_axis: Optional[str] = None,
+                 arch: Optional[str] = None):
         """``pod_axis`` names a slow cross-pod mesh axis that params (and
         their mirrored optimizer/error-feedback states) must NOT shard
         over — the standard multi-pod layout is FSDP *within* a pod and
@@ -61,19 +72,27 @@ class SpecBuilder:
         collective handled explicitly (``train/compress.py``,
         DESIGN.md §5).  The pod axis is excluded from both the data-
         parallel and the FSDP axis sets; meshes without a ``model`` axis
-        (e.g. ``data x pod``) degrade gracefully to tp=None."""
+        (e.g. ``data x pod``) degrade gracefully to tp=None.  An
+        ``expert`` axis is likewise never used for data parallelism —
+        it exists solely for the expert-weight dim in ``mode='expert'``.
+        ``arch`` names the model config in error messages."""
         self.mesh = mesh
         self.mode = mode
         self.pod_axis = pod_axis
+        self.arch = arch
         has_model = "model" in mesh.axis_names
         dp = tuple(a for a in mesh.axis_names
-                   if a != "model" and a != pod_axis)
+                   if a not in ("model", "expert") and a != pod_axis)
         self.dp_axes = dp
-        self.all_axes = tuple(a for a in mesh.axis_names if a != pod_axis)
+        self.all_axes = tuple(a for a in mesh.axis_names
+                              if a != pod_axis and a != "expert")
         self.dp = dp if len(dp) > 1 else (dp[0] if dp else None)
-        if mode == "tp":
+        if mode in ("tp", "expert"):
             self.tp = "model" if has_model else None
             self.fsdp = self.dp if fsdp else None
+            #: the expert-or-fsdp axis for MoE expert-weight leading dims
+            self.expert = ("expert" if "expert" in mesh.axis_names
+                           else self.fsdp)
         elif mode == "fsdp_sp":
             self.tp = None                     # no tensor parallelism
             self.fsdp = self.all_axes          # params over everything
@@ -121,13 +140,20 @@ class SpecBuilder:
             core = ("experts", "fsdp", "tp")        # (E, d, ff)
         if is_moe and name == "w_out":
             core = ("experts", "tp", "fsdp")        # (E, ff, d)
+        if is_moe and name == "router" and self.mode == "expert":
+            # routers replicate in expert mode: every shard must compute
+            # identical top-k routing decisions for the dispatched slots
+            # (and the GSPMD mean-psum of their grads over data) to agree
+            return P(*([None] * nd))
         if "embed" in path and nd >= 2:
             # vocab over 'model' in every mode: the fwd gather needs only a
             # small (B,S,d) combine, and unembed logits come out
             # vocab-sharded (no full-table replication; §Perf iter 5)
-            core = ("tp", "fsdp") if self.mode == "tp" else ("model", None)
+            core = (("tp", "fsdp") if self.mode in ("tp", "expert")
+                    else ("model", None))
         if "lm_head" in path and nd >= 2:
-            core = ("fsdp", "tp") if self.mode == "tp" else (None, "model")
+            core = (("fsdp", "tp") if self.mode in ("tp", "expert")
+                    else (None, "model"))
         if core is None:
             core = ("fsdp", "tp") if nd >= 2 else (None,)
         core_nd = len(core)
@@ -147,6 +173,17 @@ class SpecBuilder:
         if tag == "tp":
             return self.tp
         if tag == "experts":
+            if self.mode == "expert":
+                ax = self.expert
+                if ax is None or not _div(dim, self.mesh, ax):
+                    raise ValueError(
+                        f"arch {self.arch or '<unknown>'}: MoE expert dim "
+                        f"{dim} does not divide over expert axis {ax!r} "
+                        f"(size {_axsize(self.mesh, ax)}) in "
+                        f"mode='expert' — resize the mesh or drop the "
+                        f"expert axis instead of silently half-sharding "
+                        f"the expert bank")
+                return ax
             return self.tp if _div(dim, self.mesh, self.tp) else None
         return tag
 
@@ -263,9 +300,10 @@ class MeshSharder(Sharder):
     """Activation-constraint callback handed into model forwards."""
 
     def __init__(self, mesh, *, enable: bool = True, mode: str = "tp",
-                 pod_axis: Optional[str] = None):
+                 pod_axis: Optional[str] = None,
+                 arch: Optional[str] = None):
         self.mesh = mesh
-        self.b = SpecBuilder(mesh, mode=mode, pod_axis=pod_axis)
+        self.b = SpecBuilder(mesh, mode=mode, pod_axis=pod_axis, arch=arch)
         self.enable = enable
 
     def kv_repeat(self, n_heads: int, n_kv_heads: int) -> int:
@@ -274,7 +312,7 @@ class MeshSharder(Sharder):
         being computed via per-block all-reduces (head_dim contraction).
         Returns 1 when no such r exists (falls back to head_dim sharding)
         or when KV heads already align."""
-        if not self.enable or self.b.mode != "tp" \
+        if not self.enable or self.b.mode not in ("tp", "expert") \
                 or "model" not in self.mesh.axis_names:
             return 1
         tp = _axsize(self.mesh, "model")
@@ -292,7 +330,7 @@ class MeshSharder(Sharder):
         m, dp = self.mesh, self.b.dp
         shape = x.shape
         spec = None
-        if self.b.mode != "tp":
+        if self.b.mode not in ("tp", "expert"):
             # fsdp_sp: (B, S, ...) activations -> batch over dp, seq over
             # 'model'; fsdp_batch: batch over all axes
             if x.ndim >= 2 and name in ("act_bsd", "act_ff", "act_q",
@@ -330,8 +368,10 @@ class MeshSharder(Sharder):
             spec = P(dp if _div(shape[0], m, dp) else None, None,
                      tp if _div(shape[2], m, tp) else None)
         elif name == "moe_expert_in" or name == "moe_expert_out":
-            # (E, G, C, d)
-            axes = [tp if _div(shape[0], m, tp) else None,
+            # (E, G, C, d): the all-to-all boundary — the E dim rides the
+            # expert axis in mode='expert', the TP axis otherwise
+            eax = self.b.expert if self.b.mode == "expert" else tp
+            axes = [eax if _div(shape[0], m, eax) else None,
                     dp if _div(shape[1], m, dp) else None, None, None]
             spec = P(*axes)
         elif name == "moe_dispatch":

@@ -314,8 +314,9 @@ class EpochEngine:
         self.compress_state: Optional[Any] = None
         if mesh is not None:
             from repro.sharding.specs import SpecBuilder
-            self.spec: Optional[Any] = SpecBuilder(mesh, mode=spec_mode,
-                                                   pod_axis=self.pod_axis)
+            self.spec: Optional[Any] = SpecBuilder(
+                mesh, mode=spec_mode, pod_axis=self.pod_axis,
+                arch=getattr(bundle.cfg, "name", None))
         else:
             self.spec = None
         # RNN-T on a mesh: hand the loss a MeshSharder so the fused
@@ -326,12 +327,16 @@ class EpochEngine:
         # here to keep their jaxprs unchanged).  Pod mode anchors every
         # family: the per-pod vmap prepends the pod axis to each act_bsd
         # spec (spmd_axis_name), and without the anchor the partitioner
-        # falls back to full rematerialization of the layer-scan carry
+        # falls back to full rematerialization of the layer-scan carry.
+        # Expert mode anchors too: the (E, G, C, d) dispatch boundary
+        # must pin its E dim to the expert axis for the all-to-all to
+        # materialize instead of a full expert-bank gather
         if mesh is not None and (bundle.cfg.family == "rnnt"
-                                 or pod_active):
+                                 or pod_active or spec_mode == "expert"):
             from repro.sharding.specs import MeshSharder
             self.act_shard: Optional[Any] = MeshSharder(
-                mesh, mode=spec_mode, pod_axis=self.pod_axis)
+                mesh, mode=spec_mode, pod_axis=self.pod_axis,
+                arch=getattr(bundle.cfg, "name", None))
         else:
             self.act_shard = None
         self.units = self._place_units(units)

@@ -125,6 +125,35 @@ def test_padding_steps_leave_error_state_bitwise():
         assert _bitwise_equal(b, a)
 
 
+def test_recurrent_padding_on_pod_mesh_bitwise():
+    """The weight-0 gate must hold through the pod-mode step on the
+    recurrent substrate too (DESIGN.md §8): an all-padding plan on a
+    (1,1) ``data x pod`` top-k engine leaves RWKV6 params, opt state and
+    the error-feedback residuals bit-identical."""
+    cfg = get_config("rwkv6-3b-smoke")
+    m = build_model(cfg)
+    units = lm_units(make_lm_corpus(0, 8, 10, cfg.vocab_size,
+                                    hard_fraction=0.4), unit_size=2)
+    tc = TrainConfig(lr=0.2, optimizer="sgd", epochs=1,
+                     compress_mode="topk", compress_k_frac=0.1,
+                     pgm=PGMConfig())
+    mesh = jax.make_mesh((1, 1), ("data", "pod"))
+    eng = EpochEngine(m, tc, units, batch_units=2, mesh=mesh)
+    opt_init, _ = make_update_for(tc)
+    p = m.init_params(jax.random.PRNGKey(0))
+    o = opt_init(p)
+    p, o = eng.shard_state(p, o)
+    p, o, _ = eng.run_epoch(p, o, tc.lr, eng.full_plan(0))
+    before = (jax.tree.map(np.asarray, p), jax.tree.map(np.asarray, o),
+              jax.tree.map(np.asarray, eng.compress_state))
+    pad_plan = (jnp.full((2, 2), -1, jnp.int32),
+                jnp.zeros((2, 2), jnp.float32))
+    p, o, losses = eng.run_epoch(p, o, tc.lr, pad_plan)
+    assert np.asarray(losses).tolist() == [0.0, 0.0]
+    for b, a in zip(before, (p, o, eng.compress_state)):
+        assert _bitwise_equal(b, a)
+
+
 def test_compress_config_validation():
     m, units, _, tc = _lm_setup(compress_mode="bf16")
     # compression without a pod axis on the mesh is a config error …

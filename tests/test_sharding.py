@@ -56,6 +56,94 @@ def test_spec_builder_rules():
     assert "SPECS-OK" in out
 
 
+def test_spec_builder_expert_mode():
+    """Expert-axis mode (DESIGN.md §8): expert banks shard their leading
+    E dim over ``expert`` (or fall back to fsdp without that axis),
+    routers replicate, indivisible expert banks raise a ValueError that
+    names the arch, and the pod axis never leaks into param specs."""
+    out = _run(textwrap.dedent("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.specs import SpecBuilder
+        mesh = jax.make_mesh((2, 2, 2), ("data", "expert", "model"))
+        sb = SpecBuilder(mesh, mode="expert", arch="mixtral-8x7b")
+        # stacked expert banks: E over 'expert', d over fsdp, dff over tp
+        s = sb.param_spec(".groups.moe.w_in", (2, 4, 64, 32))
+        assert s == P(None, "expert", "data", "model"), s
+        s = sb.param_spec(".moe.w_out", (4, 32, 64))
+        assert s == P("expert", "model", "data"), s
+        # routers replicate in expert mode
+        assert sb.param_spec(".moe.router", (64, 4)) == P(None, None)
+        # dense params keep the tp rules ('expert' never carries them)
+        assert sb.param_spec(".blocks.attn.wq", (64, 64)) == \\
+            P("data", "model")
+        # indivisible expert banks fail loudly, naming the arch
+        try:
+            sb.param_spec(".moe.w_in", (3, 64, 32))
+            raise SystemExit("expected ValueError")
+        except ValueError as e:
+            assert "mixtral-8x7b" in str(e) and "expert" in str(e), e
+        # no expert axis on the mesh: E falls back to the fsdp axis and
+        # the d dim is left alone (never shard one axis twice)
+        mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+        sb2 = SpecBuilder(mesh2, mode="expert", arch="olmoe-1b-7b")
+        s = sb2.param_spec(".moe.w_in", (4, 64, 32))
+        assert s == P("data", None, "model"), s
+        # the pod axis is excluded from both fsdp and expert fallback
+        mesh3 = jax.make_mesh((2, 2, 2), ("data", "expert", "pod"))
+        sb3 = SpecBuilder(mesh3, mode="expert", pod_axis="pod", arch="x")
+        for name, shape in ((".moe.w_in", (2, 64, 32)),
+                            (".blocks.attn.wq", (64, 64)),
+                            (".embed.w", (80, 64))):
+            spec = sb3.param_spec(name, shape)
+            flat = jax.tree_util.tree_leaves(tuple(spec))
+            assert "pod" not in flat, (name, spec)
+        print("EXPERT-SPECS-OK")
+    """))
+    assert "EXPERT-SPECS-OK" in out
+
+
+def test_expert_specs_round_trip_shard_state_restore():
+    """Engine round-trip on a ``data x expert`` mesh: every leaf that
+    ``shard_state`` places must come back with the identical sharding
+    from ``restore_sharding`` given its checkpoint key path — elastic
+    restore cannot silently change the expert placement."""
+    out = _run(textwrap.dedent("""
+        import numpy as np, jax
+        import jax.tree_util as jtu
+        from repro.configs import get_config
+        from repro.configs.base import PGMConfig, TrainConfig
+        from repro.data.pipeline import lm_units
+        from repro.data.synthetic import make_lm_corpus
+        from repro.models.api import build_model
+        from repro.train.engine import EpochEngine
+        from repro.train.optim import make_update_for
+        cfg = get_config("mixtral-8x7b-smoke")
+        m = build_model(cfg)
+        units = lm_units(make_lm_corpus(0, 8, 10, cfg.vocab_size), 2)
+        tc = TrainConfig(lr=0.2, optimizer="sgd", epochs=1,
+                         pgm=PGMConfig())
+        mesh = jax.make_mesh((2, 2), ("data", "expert"))
+        eng = EpochEngine(m, tc, units, batch_units=2, mesh=mesh,
+                          spec_mode="expert")
+        opt_init, _ = make_update_for(tc)
+        p = m.init_params(jax.random.PRNGKey(0))
+        o = opt_init(p)
+        p, o = eng.shard_state(p, o)
+        n = 0
+        for tree, ck in ((p, "params"), (o, "opt")):
+            for path, leaf in jtu.tree_flatten_with_path(tree)[0]:
+                got = eng.restore_sharding(
+                    f"['{ck}']" + jtu.keystr(path), np.asarray(leaf))
+                assert got.spec == leaf.sharding.spec, \\
+                    (ck, jtu.keystr(path), got.spec, leaf.sharding.spec)
+                n += 1
+        assert n > 10, n
+        print("EXPERT-ROUNDTRIP-OK")
+    """))
+    assert "EXPERT-ROUNDTRIP-OK" in out
+
+
 def test_pgm_stage_b_shard_map_matches_single_device():
     out = _run(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np

@@ -161,6 +161,100 @@ def test_weighted_batch_weights_reach_the_loss():
     assert not np.allclose(np.asarray(losses_w), np.asarray(losses_1))
 
 
+# ---------------------------------------------------------------------------
+# Recurrent-state carries through the epoch scan (DESIGN.md §8): the
+# RWKV6 / RecurrentGemma time recurrences zero-init per utterance, so
+# the scan-of-scan must carry no hidden state across steps, resume
+# bit-exact, and treat padding steps as bit-exact no-ops.
+# ---------------------------------------------------------------------------
+
+RECURRENT = ["rwkv6-3b",
+             pytest.param("recurrentgemma-9b", marks=pytest.mark.slow)]
+
+
+def _recurrent_setup(arch, n=16, seq=10, epochs=4):
+    cfg = get_config(arch + "-smoke")
+    m = build_model(cfg)
+    units = lm_units(make_lm_corpus(0, n, seq, cfg.vocab_size,
+                                    hard_fraction=0.4), unit_size=2)
+    val = lm_units(make_lm_corpus(7, 8, seq, cfg.vocab_size), unit_size=2)
+    tc = TrainConfig(
+        lr=0.2, optimizer="sgd", epochs=epochs,
+        pgm=PGMConfig(subset_fraction=0.5, n_partitions=2, select_every=2,
+                      warm_start_epochs=1, sketch_dim_h=16, sketch_dim_v=16))
+    return m, units, val, tc
+
+
+@pytest.mark.parametrize("arch", RECURRENT)
+def test_recurrent_state_resets_per_utterance(arch):
+    """The recurrence is per-utterance: an example's loss is identical
+    whether it shares a batch with others or is evaluated alone, and
+    repeating a step at lr=0 reproduces the loss bitwise — no recurrent
+    state survives between utterances or between scan steps."""
+    m, units, _, tc = _recurrent_setup(arch)
+    params = m.init_params(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v[0]) for k, v in units.items()}
+    pe = m.per_example_loss(params, batch)
+    for i in range(int(pe.shape[0])):
+        alone = m.per_example_loss(
+            params, {k: v[i:i + 1] for k, v in batch.items()})
+        assert np.allclose(np.asarray(alone[0]), np.asarray(pe[i]),
+                           rtol=1e-5, atol=1e-6), (arch, i)
+    # same unit scheduled twice in one scanned epoch at lr=0: both steps
+    # see identical params AND identical (fresh) recurrent state
+    eng = EpochEngine(m, tc, units, batch_units=2)
+    plan = (jnp.zeros((2, 2), jnp.int32), jnp.ones((2, 2), jnp.float32))
+    opt0 = {"step": jnp.zeros((), jnp.int32)}
+    _, _, losses = eng.run_epoch(params, opt0, 0.0, plan)
+    l = np.asarray(losses)
+    assert l[0] == l[1], (arch, l)
+
+
+@pytest.mark.parametrize("arch", RECURRENT)
+def test_recurrent_padding_steps_are_bitwise_noops(arch):
+    """An all-padding plan (weight-0 gated steps) leaves params and opt
+    state bit-identical on the recurrent substrates — the gate must hold
+    through the scan-of-scan exactly as on dense LMs."""
+    m, units, _, tc = _recurrent_setup(arch)
+    eng = EpochEngine(m, tc, units, batch_units=2)
+    from repro.train.optim import make_update_for
+    opt_init, _ = make_update_for(tc)
+    params = m.init_params(jax.random.PRNGKey(0))
+    opt = opt_init(params)
+    params, opt, _ = eng.run_epoch(params, opt, tc.lr, eng.full_plan(0))
+    before = (jax.tree.map(np.asarray, params), jax.tree.map(np.asarray, opt))
+    pad_plan = (jnp.full((2, 2), -1, jnp.int32),
+                jnp.zeros((2, 2), jnp.float32))
+    params, opt, losses = eng.run_epoch(params, opt, tc.lr, pad_plan)
+    assert np.asarray(losses).tolist() == [0.0, 0.0]
+    for b, a in zip(before, (params, opt)):
+        assert all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(jax.tree.leaves(b), jax.tree.leaves(a)))
+
+
+@pytest.mark.parametrize("arch", RECURRENT)
+def test_recurrent_resume_bit_exact(arch, tmp_path):
+    """Interrupt a selection run mid-way and resume from checkpoint: the
+    remaining epochs reproduce the uninterrupted run exactly — the
+    recurrent substrates carry nothing outside (params, opt, plan
+    state), so resume is bit-exact like the dense case."""
+    m, units, val, tc = _recurrent_setup(arch, epochs=4)
+    h_full = train_with_selection(
+        m, units, tc, method="pgm", val_units=val, engine="scan",
+        ckpt_dir=str(tmp_path / "full"))
+    import dataclasses
+    tc2 = dataclasses.replace(tc, epochs=2)
+    train_with_selection(
+        m, units, tc2, method="pgm", val_units=val, engine="scan",
+        ckpt_dir=str(tmp_path / "cut"))
+    h_res = train_with_selection(
+        m, units, tc, method="pgm", val_units=val, engine="scan",
+        ckpt_dir=str(tmp_path / "cut"), resume=True)
+    assert h_res.train_loss == h_full.train_loss[2:], \
+        (arch, h_res.train_loss, h_full.train_loss)
+    assert h_res.val_loss == h_full.val_loss[2:]
+
+
 def test_donation_does_not_retain_stale_buffers():
     """run_epoch donates (params, opt_state): the inputs' buffers are
     consumed (deleted when the backend supports donation) and the engine

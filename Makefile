@@ -5,7 +5,7 @@ PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test-fast test-all test-archs bench bench-sharded bench-rnnt \
-	bench-compress bench-serve bench-archs docs-check
+	bench-compress bench-serve bench-archs bench-selection docs-check
 
 # fast tier: everything not marked slow (~3-4 min) — the development loop
 test-fast:
@@ -58,6 +58,14 @@ bench-serve:
 # substrate family (writes BENCH_archs.json)
 bench-archs:
 	$(PY) -m benchmarks.bench_archs
+
+# just the selection-round benchmark (host/resident/kernel-on/off +
+# stage-B chol-vs-dense rows) and the kernels-on/off selection-round
+# roofline from compiled HLO (DESIGN.md §9)
+bench-selection:
+	$(PY) -m benchmarks.bench_selection_round
+	$(PY) -c "from repro.launch.roofline import selection_table; \
+	    print(selection_table())"
 
 # docs integrity: no dangling file refs / make targets / DESIGN.md § cites
 docs-check:

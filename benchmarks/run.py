@@ -55,7 +55,10 @@ def main() -> None:
             if r[value_key]:
                 record[key + value_suffix] = round(r[value_key], 2)
             if "speedup" in r:
-                record[speedup_key] = round(r["speedup"], 3)
+                # rows may carry their own key (kernel-on/off and
+                # chol-vs-dense deltas next to the headline speedup)
+                record[r.get("speedup_key", speedup_key)] = \
+                    round(r["speedup"], 3)
         out = os.path.join(os.path.dirname(__file__), "..", out_name)
         with open(out, "w") as f:
             json.dump(record, f, indent=2)
@@ -90,6 +93,19 @@ def main() -> None:
     run_self_writing_bench("bench_compressed_step", "bench_compressed_step")
     run_self_writing_bench("bench_serve", "bench_serve")
     run_self_writing_bench("bench_archs", "bench_archs")
+
+    # selection-round roofline (DESIGN.md §9): compile the round with
+    # kernels on vs off and analyze the optimized HLO — reproducible
+    # here with no artifacts needed
+    try:
+        from repro.launch.roofline import selection_round_records
+        for rec in selection_round_records():
+            t = rec["terms"]
+            print(f"roofline/{rec['variant']},{t['bound_s']*1e6:.1f},"
+                  f"dom={t['dominant']};flops={rec['flops']:.3e};"
+                  f"hbm_bytes={rec['bytes_accessed']:.3e}")
+    except Exception as e:
+        print(f"selection_round_records,0,ERROR={type(e).__name__}:{e}")
 
     # roofline table from dry-run artifacts, if the sweep has run
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",

@@ -243,6 +243,11 @@ class PGMConfig:
     # the paper-faithful last-layer-only definition.  Ignored for
     # non-MoE families.
     moe_router_term: bool = False
+    # selection-round kernel backend (kernels/backend.py): "auto" uses
+    # the fused Pallas grad-sketch + Gram kernels on TPU and the XLA
+    # streamed paths elsewhere; "pallas"/"xla" force one side ("pallas"
+    # off-TPU runs the interpreter — parity/debug only, it is slow).
+    kernel_impl: str = "auto"
 
 
 @dataclass(frozen=True)

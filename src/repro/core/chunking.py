@@ -33,6 +33,36 @@ def resolve_vocab_chunk(V: int, chunk: int) -> int:
     return V if chunk <= 0 else min(int(chunk), V)
 
 
+# One budget for every vocab-streaming consumer that must keep its live
+# (rows, chunk) slab in fast memory: half of a TPU v5e core's 16 MB VMEM,
+# leaving the other half for the non-streamed operands and double
+# buffering.  The same number is a sane host-cache working-set bound, so
+# the CPU reference paths share it rather than special-casing.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+LANE = 128                       # TPU minor-dim tile (fp32 lane count)
+
+
+def auto_vocab_chunk(n_rows: int, V: int, *, dtype_bytes: int = 4,
+                     budget_bytes: int = VMEM_BUDGET_BYTES,
+                     lane: int = LANE) -> int:
+    """Auto-tuned vocab chunk width from ``(live rows, V, memory budget)``.
+
+    Returns ``V`` whenever the whole ``(n_rows, V)`` slab fits the budget
+    — small/smoke vocabs keep the single-chunk layout (and its exact
+    numerics) untouched.  Otherwise the largest lane-aligned chunk whose
+    slab fits, floored at one lane.  Shared by the fused RNN-T loss's
+    ``loss_vocab_chunk`` auto-tune (``train/engine.py``, rows =
+    ``B * (U+1) + joint_dim``) and the ``grad_sketch`` kernel's vocab
+    tiling (rows = ``tn + d``).
+    """
+    n_rows = max(int(n_rows), 1)
+    if n_rows * V * dtype_bytes <= budget_bytes:
+        return V
+    chunk = budget_bytes // (n_rows * dtype_bytes)
+    chunk = max((chunk // lane) * lane, lane)
+    return min(chunk, V)
+
+
 def n_vocab_chunks(V: int, chunk: int) -> int:
     return -(-V // chunk)
 

@@ -5,8 +5,11 @@ Given unit-gradient vectors G (n, D) and a target gradient g_t, the OMP
 loop only ever needs  K = G G^T  and  c = G g_t  (plus ||g_t||^2 for the
 error term).  The O(n D) inner products are paid once in two MXU-friendly
 matmuls (the ``omp_gram`` Pallas kernel); each OMP iteration is then O(k^2)
-gathers + an O(k^3) ridge solve — tiny and fully jittable
-(``lax.while_loop`` with a static budget bound).
+gathers + a ridge refit — O(k^2) triangular solves against an
+incrementally grown Cholesky factor (``solver="chol"``, the default), or
+the O(k^3) dense refactorization kept as the oracle (``solver="dense"``)
+— tiny and fully jittable (``lax.while_loop`` with a static budget
+bound).
 
 E_lambda(w, X) = lambda ||w||^2 + || sum_i w_i g_i - g_t ||^2
               = lambda ||w||^2 + w^T K_XX w - 2 w^T c_X + ||g_t||^2.
@@ -35,7 +38,8 @@ def gram(g: jax.Array) -> jax.Array:
 
 def _masked_ridge_solve(K_sub, c_sub, active, lam):
     """Solve (K_sub + lam I) w = c_sub over the first ``n_active`` rows;
-    inactive rows are replaced by identity => w_i = 0 there."""
+    inactive rows are replaced by identity => w_i = 0 there.  The dense
+    O(k^3)-per-iteration oracle for the incremental Cholesky path."""
     k = K_sub.shape[0]
     act = active.astype(jnp.float32)
     outer = act[:, None] * act[None, :]
@@ -45,7 +49,37 @@ def _masked_ridge_solve(K_sub, c_sub, active, lam):
     return w * act
 
 
-@partial(jax.jit, static_argnames=("budget", "nonneg"))
+def _chol_append(L, K, safe, j, i, lam):
+    """Grow the Cholesky factor of (K_active + lam I) by one row for the
+    atom ``j`` just placed at slot ``i``: O(k^2) against the dense
+    refactorization's O(k^3).
+
+    Rows past the active prefix stay identity rows (from the ``eye``
+    init), which decouples them from both triangular solves: their
+    right-hand sides are zeroed, their off-diagonals are zero, and their
+    unit diagonal maps zero to zero.
+    """
+    budget = L.shape[0]
+    idx = jnp.arange(budget)
+    k_col = jnp.where(idx < i, K[safe, j], 0.0)
+    v = jax.scipy.linalg.solve_triangular(L, k_col, lower=True)
+    dsq = K[j, j] + lam - v @ v
+    dnew = jnp.sqrt(jnp.maximum(dsq, 1e-12))
+    row = jnp.where(idx < i, v, jnp.where(idx == i, dnew, 0.0))
+    return jnp.where((idx == i)[:, None], row[None, :], L)
+
+
+def _chol_ridge_solve(L, c_sub, active):
+    """Two triangular solves against the maintained factor: the same
+    masked ridge solution as ``_masked_ridge_solve`` (identity rows pass
+    zeros through), without rebuilding or refactorizing the system."""
+    act = active.astype(jnp.float32)
+    y = jax.scipy.linalg.solve_triangular(L, c_sub * act, lower=True)
+    w = jax.scipy.linalg.solve_triangular(L.T, y, lower=False)
+    return w * act
+
+
+@partial(jax.jit, static_argnames=("budget", "nonneg", "solver"))
 def gram_omp(
     K: jax.Array,          # (n, n) fp32
     c: jax.Array,          # (n,)  <g_i, g_target>
@@ -54,7 +88,10 @@ def gram_omp(
     lam: float = 0.5,
     eps: float = 1e-10,
     nonneg: bool = True,
+    solver: str = "chol",
 ) -> OMPResult:
+    if solver not in ("chol", "dense"):
+        raise ValueError(f"unknown gram_omp solver {solver!r}")
     n = K.shape[0]
     budget = min(budget, n)
 
@@ -63,11 +100,11 @@ def gram_omp(
         return lam * jnp.sum(w_full ** 2) + quad - 2.0 * w_full @ c + target_sq
 
     def cond(state):
-        i, sel, w_full, err = state
+        i, sel, w_full, err, L = state
         return jnp.logical_and(i < budget, err > eps)
 
     def body(state):
-        i, sel, w_full, _ = state
+        i, sel, w_full, _, L = state
         # alignment of each unit with the residual r = g_t - sum w g
         scores = c - K @ w_full
         # OR-combine scatter: -1 padding maps to slot 0 with value 0, which
@@ -79,19 +116,24 @@ def gram_omp(
         sel = sel.at[i].set(j)
         # ridge refit on the selected set (gathered (budget, budget) block)
         safe = jnp.where(sel >= 0, sel, 0)
-        K_sub = K[safe][:, safe]
         c_sub = c[safe]
         active = jnp.arange(budget) <= i
-        w_sub = _masked_ridge_solve(K_sub, c_sub, active, lam)
+        if solver == "chol":
+            L = _chol_append(L, K, safe, j, i, lam)
+            w_sub = _chol_ridge_solve(L, c_sub, active)
+        else:
+            K_sub = K[safe][:, safe]
+            w_sub = _masked_ridge_solve(K_sub, c_sub, active, lam)
         if nonneg:
             w_sub = jnp.maximum(w_sub, 0.0)
         w_full = jnp.zeros((n,)).at[safe].set(w_sub * active)
-        return i + 1, sel, w_full, error_of(w_full)
+        return i + 1, sel, w_full, error_of(w_full), L
 
     sel0 = jnp.full((budget,), -1, jnp.int32)
     w0 = jnp.zeros((n,))
-    state = (jnp.asarray(0, jnp.int32), sel0, w0, target_sq + 0.0)
-    i, sel, w_full, err = jax.lax.while_loop(cond, body, state)
+    L0 = jnp.eye(budget, dtype=jnp.float32)
+    state = (jnp.asarray(0, jnp.int32), sel0, w0, target_sq + 0.0, L0)
+    i, sel, w_full, err, _ = jax.lax.while_loop(cond, body, state)
     safe = jnp.where(sel >= 0, sel, 0)
     w_sel = w_full[safe] * (sel >= 0)
     return OMPResult(sel, w_sel, i, err)
@@ -104,8 +146,9 @@ def gm_select(
     lam: float = 0.5,
     eps: float = 1e-10,
     nonneg: bool = True,
+    solver: str = "chol",
 ) -> OMPResult:
     """Algorithm 2 entry point on raw gradient vectors."""
     g = g_units.astype(jnp.float32)
     t = g_target.astype(jnp.float32)
-    return gram_omp(gram(g), g @ t, t @ t, budget, lam, eps, nonneg)
+    return gram_omp(gram(g), g @ t, t @ t, budget, lam, eps, nonneg, solver)

@@ -106,12 +106,17 @@ def streamed_er2(h, w_head, targets, scale, r_v, chunk: int = 8192):
 
 
 def lm_unit_sketch(bundle, params, batch, proj: Projections,
-                   vocab_chunk: int = 8192, shard=None) -> jax.Array:
+                   vocab_chunk: int = 8192, shard=None,
+                   kernel_impl: Optional[str] = None) -> jax.Array:
     h, targets, scale = lm_unit_factors(bundle, params, batch, shard)
     w = bundle.head_weight(params)
-    er2 = streamed_er2(h, w, targets, scale, proj.r_v, vocab_chunk)
-    hr = h @ proj.r_h
-    return (hr.T @ er2).reshape(-1)
+    # fused gradient+sketch dispatch: Pallas kernel or the streamed_er2
+    # XLA path per ``kernel_impl`` (lazy import — ops.py imports our
+    # streamed_er2 as its fallback)
+    from repro.kernels.grad_sketch.ops import grad_sketch_op
+    return grad_sketch_op(h, w, proj.r_h, proj.r_v, targets, scale,
+                          vocab_chunk=vocab_chunk,
+                          impl=kernel_impl).reshape(-1)
 
 
 def lm_unit_exact(bundle, params, batch, shard=None) -> jax.Array:
@@ -259,12 +264,16 @@ def moe_router_grads(bundle, params, batch, shard=None):
 
 
 def moe_unit_sketch(bundle, params, batch, proj: Projections,
-                    vocab_chunk: int = 8192, shard=None) -> jax.Array:
+                    vocab_chunk: int = 8192, shard=None,
+                    kernel_impl: Optional[str] = None) -> jax.Array:
     """Router-aware MoE unit representation: the lm_head sketch
     concatenated with each router gradient projected through ``r_h`` on
     its d_model dim (router weights are (..., d, E), so the same
-    projection matrix serves both terms)."""
-    head = lm_unit_sketch(bundle, params, batch, proj, vocab_chunk, shard)
+    projection matrix serves both terms).  The router term itself stays
+    on the XLA autodiff path regardless of ``kernel_impl`` — only the
+    head block dispatches to the fused kernel."""
+    head = lm_unit_sketch(bundle, params, batch, proj, vocab_chunk, shard,
+                          kernel_impl)
     rh = proj.r_h.astype(jnp.float32)
     parts = [jnp.einsum("...de,dk->...ke", g, rh).reshape(-1)
              for g in moe_router_grads(bundle, params, batch, shard)]
@@ -285,32 +294,38 @@ def moe_unit_exact(bundle, params, batch, shard=None) -> jax.Array:
 
 def unit_gradient(bundle, params, batch, proj: Optional[Projections],
                   exact: bool = False, vocab_chunk: int = 8192,
-                  shard=None, router_term: bool = False) -> jax.Array:
+                  shard=None, router_term: bool = False,
+                  kernel_impl: Optional[str] = None) -> jax.Array:
     """One selection unit -> gradient representation vector.
 
     ``router_term`` (MoE family only) appends the router-logit gradient
     term to the head-gradient representation — see module docstring and
-    DESIGN.md §8 for the definition and its cost."""
+    DESIGN.md §8 for the definition and its cost.  ``kernel_impl``
+    (``auto``/``pallas``/``xla``) picks the fused grad-sketch backend for
+    the LM/MoE head block; the RNN-T sketch already rides the fused
+    loss's ``dw_out`` custom_vjp factors, and the exact path is XLA-only."""
     if bundle.cfg.family == "rnnt":
         return (rnnt_unit_exact(bundle, params, batch, shard) if exact
                 else rnnt_unit_sketch(bundle, params, batch, proj, shard))
     if router_term and bundle.cfg.family == "moe":
         return (moe_unit_exact(bundle, params, batch, shard) if exact
                 else moe_unit_sketch(bundle, params, batch, proj,
-                                     vocab_chunk, shard))
+                                     vocab_chunk, shard, kernel_impl))
     return (lm_unit_exact(bundle, params, batch, shard) if exact
             else lm_unit_sketch(bundle, params, batch, proj, vocab_chunk,
-                                shard))
+                                shard, kernel_impl))
 
 
 def units_gradients(bundle, params, units, proj: Optional[Projections],
                     exact: bool = False, vocab_chunk: int = 8192,
-                    router_term: bool = False) -> jax.Array:
+                    router_term: bool = False,
+                    kernel_impl: Optional[str] = None) -> jax.Array:
     """units: batch pytree with leading (n_units, ...) axis.
     Returns (n_units, D) fp32.  Sequential lax.map bounds peak memory to a
     single unit's forward pass (the paper's partition rationale)."""
     fn = lambda u: unit_gradient(bundle, params, u, proj, exact, vocab_chunk,
-                                 router_term=router_term)
+                                 router_term=router_term,
+                                 kernel_impl=kernel_impl)
     return jax.lax.map(fn, units)
 
 
@@ -328,7 +343,8 @@ def units_gradients_scanned(bundle, params, units,
                             chunk_units: Optional[int] = None,
                             vocab_chunk: int = 8192,
                             shard=None,
-                            router_term: bool = False) -> jax.Array:
+                            router_term: bool = False,
+                            kernel_impl: Optional[str] = None) -> jax.Array:
     """Family-agnostic batched stage A: scan over unit *chunks*, vmap the
     per-unit gradient representation within a chunk.  Peak memory is
     bounded by ``chunk_units`` forward passes (vs one for the fully
@@ -346,7 +362,8 @@ def units_gradients_scanned(bundle, params, units,
     xs = jax.tree.map(
         lambda a: a.reshape((U // cu, cu) + a.shape[1:]), units)
     fn = lambda u: unit_gradient(bundle, params, u, proj, exact, vocab_chunk,
-                                 shard, router_term=router_term)
+                                 shard, router_term=router_term,
+                                 kernel_impl=kernel_impl)
 
     def chunk_fn(_, cb):
         return None, jax.vmap(fn)(cb)
@@ -360,7 +377,8 @@ def units_gradients_batched(bundle, params, units,
                             chunk_units: Optional[int] = None,
                             shard=None, vocab_chunk: int = 8192,
                             exact: bool = False,
-                            router_term: bool = False) -> jax.Array:
+                            router_term: bool = False,
+                            kernel_impl: Optional[str] = None) -> jax.Array:
     """Batched stage-A gradient representations for resident/distributed
     selection rounds.
 
@@ -387,7 +405,9 @@ def units_gradients_batched(bundle, params, units,
         return units_gradients_scanned(bundle, params, units, proj,
                                        exact=exact, chunk_units=chunk_units,
                                        vocab_chunk=vocab_chunk, shard=shard,
-                                       router_term=router_term)
+                                       router_term=router_term,
+                                       kernel_impl=kernel_impl)
+    from repro.kernels.grad_sketch.ops import grad_sketch_units_op
     from repro.models.common import IDENTITY_SHARDER
     shard = shard or IDENTITY_SHARDER
     lead = jax.tree.leaves(units)[0].shape
@@ -406,15 +426,14 @@ def units_gradients_batched(bundle, params, units,
         S = h.shape[1]
         denom = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1.0)
         scale = (mask / (denom * b)).astype(jnp.float32)
-        hf = h.reshape(-1, d).astype(jnp.float32)
-        er2 = streamed_er2(hf, w, targets.reshape(-1).astype(jnp.int32),
-                           scale.reshape(-1), proj.r_v, vocab_chunk)
-        hr = hf @ proj.r_h.astype(jnp.float32)
-        k1, k2 = hr.shape[-1], er2.shape[-1]
-        sk = jnp.einsum("unk,unl->ukl",
-                        hr.reshape(cu, b * S, k1),
-                        er2.reshape(cu, b * S, k2))
-        return None, sk.reshape(cu, k1 * k2)
+        # fused per-unit gradient + two-sided sketch: one kernel call per
+        # chunk (Pallas streams the vocab axis in VMEM; the XLA fallback
+        # is the historical streamed_er2 + segment-einsum, bit-identical)
+        sk = grad_sketch_units_op(
+            h.reshape(cu, b * S, d), w, proj.r_h, proj.r_v,
+            targets.reshape(cu, b * S), scale.reshape(cu, b * S),
+            vocab_chunk=vocab_chunk, impl=kernel_impl)
+        return None, sk.reshape(cu, -1)
 
     _, sks = jax.lax.scan(chunk_fn, None, xs)
     return sks.reshape(U, -1)

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from repro.core import gm
 from repro.core.lastlayer import units_gradients, units_gradients_batched
 from repro.core.sketch import Projections
+from repro.kernels.backend import resolve_kernel_impl
+from repro.kernels.omp_gram.ops import omp_gram_batched_op
 
 
 class Selection(NamedTuple):
@@ -49,7 +51,8 @@ class Selection(NamedTuple):
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("n_partitions", "budget_per_part",
-                                   "nonneg", "val_matching"))
+                                   "nonneg", "val_matching", "kernel_impl",
+                                   "solver"))
 def partitioned_gm(
     g_units: jax.Array,            # (n, D) unit-gradient vectors
     n_partitions: int,
@@ -59,6 +62,8 @@ def partitioned_gm(
     nonneg: bool = True,
     val_matching: bool = False,
     g_val: Optional[jax.Array] = None,   # (D,) required when val_matching
+    kernel_impl: Optional[str] = None,   # PGMConfig.kernel_impl string
+    solver: str = "chol",
 ) -> Selection:
     n, D_sk = g_units.shape
     P = n_partitions
@@ -73,12 +78,17 @@ def partitioned_gm(
         # that sum_i w_i g_i can reach it with O(1) weights per unit
         target = gp.sum(axis=1)
 
-    def one_partition(g_p, t_p):
-        K = g_p @ g_p.T
-        c = g_p @ t_p
-        return gm.gram_omp(K, c, t_p @ t_p, budget_per_part, lam, eps, nonneg)
+    # all P Grams from one batched kernel call (Pallas on TPU / per
+    # kernel_impl); c and ||t||^2 are cheap rank-1 contractions
+    K = omp_gram_batched_op(gp, impl=kernel_impl)
+    c = jnp.einsum("pnd,pd->pn", gp, target)
+    tsq = jnp.einsum("pd,pd->p", target, target)
 
-    res = jax.vmap(one_partition)(gp, target)
+    def one_partition(K_p, c_p, tsq_p):
+        return gm.gram_omp(K_p, c_p, tsq_p, budget_per_part, lam, eps,
+                           nonneg, solver)
+
+    res = jax.vmap(one_partition)(K, c, tsq)
     offsets = (jnp.arange(P, dtype=jnp.int32) * per)[:, None]
     glob = jnp.where(res.indices >= 0, res.indices + offsets, -1)
     return Selection(
@@ -110,7 +120,8 @@ def _stage_b(g_units, pgm_cfg, g_val=None, mesh=None,
         return pgm_select_sharded(mesh, data_axis, g_units, cfg, g_val=g_val)
     return partitioned_gm(
         g_units, D, budget_per, pgm_cfg.lam, pgm_cfg.eps,
-        pgm_cfg.nonneg_weights, pgm_cfg.val_matching, g_val)
+        pgm_cfg.nonneg_weights, pgm_cfg.val_matching, g_val,
+        kernel_impl=_impl_of(pgm_cfg))
 
 
 def _val_target(gv, n_units: int, pgm_cfg) -> jax.Array:
@@ -133,13 +144,14 @@ def pgm_select(
     n_units = jax.tree.leaves(units)[0].shape[0]
     exact = not pgm_cfg.use_sketch
     rt = _router_term_for(bundle, pgm_cfg)
+    impl = _impl_of(pgm_cfg)
 
     g = units_gradients(bundle, params, units, proj, exact=exact,
-                        router_term=rt)
+                        router_term=rt, kernel_impl=impl)
     g_val = None
     if pgm_cfg.val_matching:
         gv = units_gradients(bundle, params, val_units, proj, exact=exact,
-                             router_term=rt)
+                             router_term=rt, kernel_impl=impl)
         g_val = _val_target(gv, n_units, pgm_cfg)
     return _stage_b(g, pgm_cfg, g_val=g_val, mesh=mesh, data_axis=data_axis)
 
@@ -149,6 +161,12 @@ def _router_term_for(bundle, pgm_cfg) -> bool:
     (DESIGN.md §8); other families silently ignore the flag."""
     return bool(getattr(pgm_cfg, "moe_router_term", False)
                 and bundle.cfg.family == "moe")
+
+
+def _impl_of(pgm_cfg) -> str:
+    """Kernel backend string from config, tolerant of older configs that
+    predate the ``kernel_impl`` field."""
+    return getattr(pgm_cfg, "kernel_impl", "auto") or "auto"
 
 
 class ResidentSelector:
@@ -173,18 +191,28 @@ class ResidentSelector:
 
     def __init__(self, bundle, pgm_cfg, proj: Optional[Projections] = None,
                  *, chunk_units: Optional[int] = None, mesh=None,
-                 data_axis: str = "data", vocab_chunk: int = 8192):
+                 data_axis: str = "data", vocab_chunk: int = 8192,
+                 log_fn=None):
         self.bundle = bundle
         self.cfg = pgm_cfg
         self.mesh = mesh
         self.data_axis = data_axis
         exact = not pgm_cfg.use_sketch
         rt = _router_term_for(bundle, pgm_cfg)
+        impl = _impl_of(pgm_cfg)
+        # resolve once at build time and surface the decision: "auto" is
+        # data-dependent (TPU vs host), and a silent wrong backend is
+        # exactly the kind of perf bug a log line catches
+        self.kernel_impl = resolve_kernel_impl(impl)
+        if log_fn is not None:
+            log_fn(f"selection kernels: requested={impl} "
+                   f"resolved={self.kernel_impl}")
 
         def stage_a(params, units):
             return units_gradients_batched(
                 bundle, params, units, proj, chunk_units=chunk_units,
-                vocab_chunk=vocab_chunk, exact=exact, router_term=rt)
+                vocab_chunk=vocab_chunk, exact=exact, router_term=rt,
+                kernel_impl=impl)
 
         # one jit for train and val units alike: the cache keys on unit
         # shapes, so each distinct corpus compiles once and every later
@@ -242,7 +270,8 @@ def pgm_select_sharded(mesh, axis: str, g_units, pgm_cfg, g_val=None):
         sel = partitioned_gm(
             g_local, local_parts, budget_per, pgm_cfg.lam, pgm_cfg.eps,
             pgm_cfg.nonneg_weights, pgm_cfg.val_matching,
-            g_val_local[0] if pgm_cfg.val_matching else None)
+            g_val_local[0] if pgm_cfg.val_matching else None,
+            kernel_impl=_impl_of(pgm_cfg))
         # globalize indices by shard offset
         idx = jax.lax.axis_index(axis) * (n // size)
         indices = jnp.where(sel.indices >= 0, sel.indices + idx, -1)

@@ -25,8 +25,15 @@ class Projections(NamedTuple):
     r_v: jax.Array      # (d_vocab, k2)
 
     @property
+    def sketch_dims(self) -> Tuple[int, int]:
+        """(k1, k2) — the unflattened sketch block shape the fused
+        ``grad_sketch`` kernel emits per unit (DESIGN.md §9)."""
+        return self.r_h.shape[1], self.r_v.shape[1]
+
+    @property
     def sketch_dim(self) -> int:
-        return self.r_h.shape[1] * self.r_v.shape[1]
+        k1, k2 = self.sketch_dims
+        return k1 * k2
 
 
 def make_projections(key, d_hidden: int, d_vocab: int,

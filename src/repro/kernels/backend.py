@@ -1,0 +1,48 @@
+"""Explicit kernel-backend selection for the selection-round kernels.
+
+Before PR 8 every ``ops.py`` wrapper decided its backend implicitly
+(``on_tpu()`` at call time).  That stays the default, but the choice is
+now a first-class, loggable knob: ``PGMConfig.kernel_impl`` /
+``--selection-kernels`` take one of
+
+* ``"auto"``   — Pallas on TPU, the XLA reference path elsewhere (the
+  old implicit behaviour);
+* ``"pallas"`` — force the Pallas kernels; off-TPU they run in
+  interpret mode (bit-faithful CPU emulation — this is what the parity
+  suite in ``tests/test_selection_kernels.py`` forces on);
+* ``"xla"``    — force the pure-jnp reference path everywhere.
+
+``resolve_kernel_impl`` collapses ``auto`` against the live backend so
+the resolved choice can be logged once per selector build and threaded
+as a jit-static string from there on.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+KERNEL_IMPLS = ("auto", "pallas", "xla")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_kernel_impl(impl: Optional[str] = "auto") -> str:
+    """Collapse an ``auto``/``pallas``/``xla`` request against the live
+    backend -> ``"pallas"`` or ``"xla"``."""
+    impl = "auto" if impl is None else impl
+    if impl not in KERNEL_IMPLS:
+        raise ValueError(
+            f"kernel_impl must be one of {KERNEL_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if on_tpu() else "xla"
+    return impl
+
+
+def pallas_flags(impl: Optional[str]) -> Tuple[bool, bool]:
+    """``(use_pallas, interpret)`` for the kernel ``ops.py`` wrappers:
+    compiled Pallas on TPU, interpret-mode Pallas off-TPU when forced."""
+    resolved = resolve_kernel_impl(impl)
+    return resolved == "pallas", not on_tpu()

@@ -2,25 +2,33 @@
 
 Backend selection: Pallas kernel on TPU (or interpret=True for CPU
 validation); the vocab-chunked pure-jnp path (core.lastlayer.streamed_er2)
-elsewhere — same memory behaviour, XLA-fused."""
+elsewhere — same memory behaviour, XLA-fused.  Callers holding a
+``PGMConfig.kernel_impl`` string pass it as ``impl`` and both flags are
+resolved by ``kernels/backend.py``; the legacy ``use_pallas``/``interpret``
+kwargs keep working for direct callers and tests.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.lastlayer import streamed_er2
+from repro.kernels.backend import on_tpu, pallas_flags
 from repro.kernels.grad_sketch.kernel import grad_sketch as _pallas_sketch
-
-
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.grad_sketch.kernel import (
+    grad_sketch_units as _pallas_sketch_units,
+)
 
 
 def grad_sketch_op(h, w, r_h, r_v, targets, scale, *,
                    use_pallas: bool = None, interpret: bool = None,
-                   vocab_chunk: int = 8192):
+                   vocab_chunk: int = 8192, impl: Optional[str] = None):
     """h (N,d); w (d,V); r_h (d,k1); r_v (V,k2); targets (N,); scale (N,)
     -> (k1, k2) fp32 sketch of the last-layer gradient."""
+    if impl is not None:
+        use_pallas, interpret = pallas_flags(impl)
     use_pallas = on_tpu() if use_pallas is None else use_pallas
     if use_pallas:
         interpret = (not on_tpu()) if interpret is None else interpret
@@ -30,3 +38,33 @@ def grad_sketch_op(h, w, r_h, r_v, targets, scale, *,
                        scale.astype(jnp.float32), r_v, vocab_chunk)
     hr = h.astype(jnp.float32) @ r_h.astype(jnp.float32)
     return hr.T @ er2
+
+
+def grad_sketch_units_op(h, w, r_h, r_v, targets, scale, *,
+                         use_pallas: bool = None, interpret: bool = None,
+                         vocab_chunk: int = 8192,
+                         impl: Optional[str] = None):
+    """Per-unit fused sketch: h (U,n,d); targets/scale (U,n) -> (U,k1,k2).
+
+    The stage-A entry point for the batched LM path
+    (``core/lastlayer.py:units_gradients_batched``).  The XLA fallback
+    flattens the unit axis and reuses ``streamed_er2`` + a segment einsum
+    — bit-identical to the historical batched-path math.
+    """
+    if impl is not None:
+        use_pallas, interpret = pallas_flags(impl)
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        return _pallas_sketch_units(h, w, r_h, r_v, targets, scale,
+                                    interpret=interpret)
+    U, n, d = h.shape
+    k1 = r_h.shape[1]
+    k2 = r_v.shape[1]
+    hf = h.reshape(-1, d).astype(jnp.float32)
+    er2 = streamed_er2(hf, w, targets.reshape(-1).astype(jnp.int32),
+                       scale.reshape(-1).astype(jnp.float32), r_v,
+                       vocab_chunk)
+    hr = hf @ r_h.astype(jnp.float32)
+    return jnp.einsum("unk,unl->ukl", hr.reshape(U, n, k1),
+                      er2.reshape(U, n, k2))

@@ -13,3 +13,10 @@ def grad_sketch_ref(h, w, r_h, r_v, targets, scale):
     e = p - jax.nn.one_hot(targets, w.shape[1], dtype=jnp.float32)
     e = e * scale.astype(jnp.float32)[:, None]
     return (h32 @ r_h.astype(jnp.float32)).T @ (e @ r_v.astype(jnp.float32))
+
+
+def grad_sketch_units_ref(h, w, r_h, r_v, targets, scale):
+    """(U, n, d) / (U, n) inputs -> (U, k1, k2) per-unit sketches."""
+    return jax.vmap(
+        lambda hu, tu, su: grad_sketch_ref(hu, w, r_h, r_v, tu, su)
+    )(h, targets, scale)

@@ -4,6 +4,12 @@ This is the one O(n^2 D) operation in Gram-space OMP (core/gm.py); inputs
 are bf16/fp32 unit-gradient sketches (n, D).  Tiling: (ti, tj) output
 tiles, sequential accumulation over D tiles in VMEM scratch; MXU-aligned
 defaults ti=tj=256, td=512.
+
+The grid carries a leading partition axis so stage B's per-partition
+Grams (``core/pgm.py:partitioned_gm`` needs (P, per, per) from
+(P, per, D)) come out of one kernel call: ``omp_gram_batched`` runs the
+same body on a ``(P, i, j, k)`` grid with per-partition (1, ti, td)
+blocks; ``omp_gram`` is its P = 1 special case.
 """
 from __future__ import annotations
 
@@ -16,45 +22,53 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _gram_kernel(gi_ref, gj_ref, out_ref, acc_ref):
-    k = pl.program_id(2)
+    k = pl.program_id(3)
 
     @pl.when(k == 0)
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = gi_ref[...].astype(jnp.float32)
-    b = gj_ref[...].astype(jnp.float32)
+    a = gi_ref[0].astype(jnp.float32)
+    b = gj_ref[0].astype(jnp.float32)
     acc_ref[...] += a @ b.T
 
-    @pl.when(k == pl.num_programs(2) - 1)
+    @pl.when(k == pl.num_programs(3) - 1)
     def _():
-        out_ref[...] = acc_ref[...]
+        out_ref[...] = acc_ref[...][None]
 
 
 @functools.partial(jax.jit, static_argnames=("ti", "tj", "td", "interpret"))
-def omp_gram(g, *, ti: int = 256, tj: int = 256, td: int = 512,
-             interpret: bool = True) -> jax.Array:
-    """g: (n, D) -> (n, n) fp32 Gram matrix."""
-    n, D = g.shape
+def omp_gram_batched(g, *, ti: int = 256, tj: int = 256, td: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """g: (P, n, D) -> (P, n, n) fp32 per-partition Gram matrices."""
+    P, n, D = g.shape
     ti = min(ti, n)
     tj = min(tj, n)
     td = min(td, D)
     n_pad = (-n) % max(ti, tj)
     d_pad = (-D) % td
-    gp = jnp.pad(g, ((0, n_pad), (0, d_pad)))
-    Np, Dp = gp.shape
-    grid = (Np // ti, Np // tj, Dp // td)
+    gp = jnp.pad(g, ((0, 0), (0, n_pad), (0, d_pad)))
+    Np, Dp = gp.shape[1:]
+    grid = (P, Np // ti, Np // tj, Dp // td)
 
     out = pl.pallas_call(
         _gram_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ti, td), lambda i, j, k: (i, k)),
-            pl.BlockSpec((tj, td), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, ti, td), lambda p, i, j, k: (p, i, k)),
+            pl.BlockSpec((1, tj, td), lambda p, i, j, k: (p, j, k)),
         ],
-        out_specs=pl.BlockSpec((ti, tj), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Np, Np), jnp.float32),
+        out_specs=pl.BlockSpec((1, ti, tj), lambda p, i, j, k: (p, i, j)),
+        out_shape=jax.ShapeDtypeStruct((P, Np, Np), jnp.float32),
         scratch_shapes=[pltpu.VMEM((ti, tj), jnp.float32)],
         interpret=interpret,
     )(gp, gp)
-    return out[:n, :n]
+    return out[:, :n, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("ti", "tj", "td", "interpret"))
+def omp_gram(g, *, ti: int = 256, tj: int = 256, td: int = 512,
+             interpret: bool = True) -> jax.Array:
+    """g: (n, D) -> (n, n) fp32 Gram matrix (the P = 1 batched case)."""
+    return omp_gram_batched(g[None], ti=ti, tj=tj, td=td,
+                            interpret=interpret)[0]

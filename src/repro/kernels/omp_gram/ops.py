@@ -1,19 +1,41 @@
-"""jit'd wrapper: Pallas on TPU / interpret for validation, XLA elsewhere."""
+"""jit'd wrapper: Pallas on TPU / interpret for validation, XLA elsewhere.
+
+Backend choice is explicit when the caller passes ``impl`` (an
+``auto``/``pallas``/``xla`` string from ``PGMConfig.kernel_impl``, see
+``kernels/backend.py``); the legacy ``use_pallas``/``interpret`` kwargs
+keep working for direct callers and tests.
+"""
 from __future__ import annotations
 
-import jax
+from typing import Optional
 
+from repro.kernels.backend import on_tpu, pallas_flags
 from repro.kernels.omp_gram.kernel import omp_gram as _pallas_gram
-from repro.kernels.omp_gram.ref import omp_gram_ref
+from repro.kernels.omp_gram.kernel import omp_gram_batched as _pallas_batched
+from repro.kernels.omp_gram.ref import omp_gram_batched_ref, omp_gram_ref
 
 
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def omp_gram_op(g, *, use_pallas: bool = None, interpret: bool = None):
+def omp_gram_op(g, *, use_pallas: bool = None, interpret: bool = None,
+                impl: Optional[str] = None):
+    """(n, D) -> (n, n) fp32 Gram matrix."""
+    if impl is not None:
+        use_pallas, interpret = pallas_flags(impl)
     use_pallas = on_tpu() if use_pallas is None else use_pallas
     if use_pallas:
         interpret = (not on_tpu()) if interpret is None else interpret
         return _pallas_gram(g, interpret=interpret)
     return omp_gram_ref(g)
+
+
+def omp_gram_batched_op(g, *, use_pallas: bool = None,
+                        interpret: bool = None,
+                        impl: Optional[str] = None):
+    """(P, n, D) -> (P, n, n) fp32 per-partition Gram matrices — the
+    stage-B entry point (``core/pgm.py:partitioned_gm``)."""
+    if impl is not None:
+        use_pallas, interpret = pallas_flags(impl)
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        return _pallas_batched(g, interpret=interpret)
+    return omp_gram_batched_ref(g)

@@ -5,3 +5,9 @@ import jax.numpy as jnp
 def omp_gram_ref(g):
     g32 = g.astype(jnp.float32)
     return g32 @ g32.T
+
+
+def omp_gram_batched_ref(g):
+    """(P, n, D) -> (P, n, n): per-partition Grams, batched contraction."""
+    g32 = g.astype(jnp.float32)
+    return jnp.einsum("pnd,pmd->pnm", g32, g32)

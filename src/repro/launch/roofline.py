@@ -107,6 +107,112 @@ def roofline_terms(rec: Dict) -> Dict:
     return terms
 
 
+def generic_terms(rec: Dict) -> Dict:
+    """Roofline terms for a record that is not an (arch, shape, step)
+    training cell — e.g. the selection round — from raw per-device
+    ``flops`` / ``bytes_accessed`` / ``wire_bytes``.  No model-FLOPs
+    usefulness ratio: the round's ideal FLOP count is the sketch
+    contraction itself, which IS the measured program."""
+    flops = rec.get("flops") or 0.0
+    bytes_acc = rec.get("bytes_accessed") or 0.0
+    wire = rec.get("wire_bytes") or 0.0
+    compute_t = flops / PEAK_FLOPS
+    memory_t = bytes_acc / HBM_BW
+    coll_t = wire / ICI_BW
+    return {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": max(
+            [("compute", compute_t), ("memory", memory_t),
+             ("collective", coll_t)], key=lambda kv: kv[1])[0],
+        "bound_s": max(compute_t, memory_t, coll_t, 1e-30),
+        "flops_per_byte": (flops / bytes_acc) if bytes_acc else None,
+    }
+
+
+def selection_round_records(n_examples: int = 128, seq: int = 12,
+                            unit_size: int = 2,
+                            arch: str = "starcoder2-3b-smoke") -> List[Dict]:
+    """Compile one full PGM selection round — stage A fused grad-sketch
+    over all units + stage B partitioned Gram/OMP — with the selection
+    kernels on (``pallas``) vs off (``xla``) and analyze the optimized
+    HLO of each (launch/hlo_analysis.py): FLOPs, HBM bytes, wire bytes,
+    and the v5e roofline terms.
+
+    Caveat (DESIGN.md §9): off-TPU the ``pallas`` variant compiles the
+    *interpreter's* lowering — its FLOP count still reflects the fused
+    algorithm (the dots are real), but its byte count includes
+    interpreter bookkeeping traffic that does not exist on TPU, so
+    kernel-on bytes off-TPU are an overcount, not a measurement.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import PGMConfig
+    from repro.core.lastlayer import make_proj_for, units_gradients_batched
+    from repro.core.pgm import partitioned_gm
+    from repro.data.pipeline import lm_units
+    from repro.data.synthetic import make_lm_corpus
+    from repro.launch import hlo_analysis
+    from repro.models.api import build_model
+
+    cfg = get_config(arch)
+    bundle = build_model(cfg)
+    corpus = make_lm_corpus(0, n_examples, seq, cfg.vocab_size,
+                            hard_fraction=0.4)
+    units = {k: jnp.asarray(v)
+             for k, v in lm_units(corpus, unit_size=unit_size).items()}
+    n_units = int(units["tokens"].shape[0])
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    proj = make_proj_for(bundle, jax.random.fold_in(jax.random.PRNGKey(0),
+                                                    17), 32, 32)
+    pc = PGMConfig(subset_fraction=0.3, n_partitions=4,
+                   sketch_dim_h=32, sketch_dim_v=32)
+    budget_per = max(int(pc.subset_fraction * n_units)
+                     // pc.n_partitions, 1)
+
+    recs = []
+    for impl in ("xla", "pallas"):
+        def round_fn(params, units, impl=impl):
+            g = units_gradients_batched(bundle, params, units, proj,
+                                        kernel_impl=impl)
+            return partitioned_gm(g, pc.n_partitions, budget_per, pc.lam,
+                                  pc.eps, pc.nonneg_weights, False, None,
+                                  kernel_impl=impl)
+
+        text = jax.jit(round_fn).lower(params, units).compile().as_text()
+        an = hlo_analysis.analyze(text)
+        rec = {
+            "variant": f"selection_round[{impl}]",
+            "kernel_impl": impl,
+            "arch": arch,
+            "n_units": n_units,
+            "flops": an.flops,
+            "bytes_accessed": an.bytes,
+            "wire_bytes": an.wire_bytes,
+        }
+        rec["terms"] = generic_terms(rec)
+        recs.append(rec)
+    return recs
+
+
+def selection_table(recs: Optional[List[Dict]] = None) -> str:
+    recs = selection_round_records() if recs is None else recs
+    hdr = (f"{'variant':26s} {'flops':>12s} {'hbm_bytes':>12s} "
+           f"{'compute_s':>11s} {'memory_s':>11s} {'domin':>7s} "
+           f"{'flop/B':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        t = r["terms"]
+        fb = f"{t['flops_per_byte']:.2f}" if t["flops_per_byte"] else "n/a"
+        lines.append(
+            f"{r['variant']:26s} {r['flops']:12.3e} "
+            f"{r['bytes_accessed']:12.3e} {t['compute_s']:11.3e} "
+            f"{t['memory_s']:11.3e} {t['dominant']:>7s} {fb:>7s}")
+    return "\n".join(lines)
+
+
 def load_artifacts(art_dir: str = "artifacts/dryrun") -> List[Dict]:
     out = []
     for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):

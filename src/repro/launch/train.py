@@ -179,6 +179,12 @@ def main():
     ap.add_argument("--exact-gradients", action="store_true",
                     help="paper-faithful exact last-layer gradients "
                          "(no sketching)")
+    ap.add_argument("--selection-kernels", default="auto",
+                    choices=["auto", "pallas", "xla"],
+                    help="selection-round kernel backend "
+                         "(PGMConfig.kernel_impl): fused Pallas "
+                         "grad-sketch + Gram kernels vs the XLA "
+                         "streamed paths; auto = pallas on TPU only")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -194,7 +200,8 @@ def main():
                       select_every=args.select_every,
                       warm_start_epochs=args.warm_start,
                       val_matching=args.noise > 0,
-                      use_sketch=not args.exact_gradients))
+                      use_sketch=not args.exact_gradients,
+                      kernel_impl=args.selection_kernels))
     h = launch_train(args.arch, tc, method=args.method, engine=args.engine,
                      resident_selection=args.resident_selection,
                      mesh=parse_mesh(args.mesh, args.mesh_axes),

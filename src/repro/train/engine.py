@@ -220,6 +220,47 @@ def plan_live_steps(plan) -> np.ndarray:
     return np.asarray(plan[0])[:, 0] >= 0
 
 
+def autotune_loss_vocab_chunk(bundle, units, batch_units: int):
+    """Resolve ``RNNTConfig.loss_vocab_chunk == 0`` ("auto") into a
+    concrete chunk width at engine build time and rebuild the bundle on
+    it when that changes the layout.
+
+    The fused transducer loss streams a ``(rows, chunk)`` slab per vocab
+    chunk — the joint-head columns plus the per-chunk lattice block,
+    ``rows ~= B * (U+1) + joint_dim`` for batch size
+    ``B = batch_units * unit_size`` — so the width comes from the shared
+    ``core/chunking.py:auto_vocab_chunk`` resolver (the same budget that
+    tiles the grad-sketch kernel's vocab axis).  Small/smoke vocabs
+    resolve to a single full-vocab chunk, i.e. exactly the historical
+    ``0`` behaviour; an explicit negative value keeps forcing one chunk,
+    and an explicit positive value is always respected.
+
+    Returns ``(bundle, resolved_chunk)``; the bundle is rebuilt (same
+    config surgery as ``models/api.py:build_model``) only when the tuned
+    width is smaller than the vocab.
+    """
+    cfg_m = bundle.cfg
+    r = getattr(cfg_m, "rnnt", None)
+    if getattr(cfg_m, "family", None) != "rnnt" or r is None:
+        return bundle, None
+    if r.loss_vocab_chunk != 0:
+        return bundle, r.loss_vocab_chunk
+    leaf = jax.tree.leaves(units)[0]
+    unit_size = int(leaf.shape[1])
+    U = int(units["tokens"].shape[2])
+    from repro.core.chunking import auto_vocab_chunk
+    rows = int(batch_units) * unit_size * (U + 1) + int(r.joint_dim)
+    tuned = auto_vocab_chunk(rows, int(r.vocab_size))
+    if tuned >= int(r.vocab_size):
+        return bundle, tuned
+    import dataclasses
+
+    from repro.models.api import build_model
+    cfg_new = dataclasses.replace(
+        cfg_m, rnnt=dataclasses.replace(r, loss_vocab_chunk=tuned))
+    return build_model(cfg_new), tuned
+
+
 class EpochEngine:
     """Scanned-epoch executor around a ModelBundle.
 
@@ -287,6 +328,8 @@ class EpochEngine:
                  batch_units: int = 1,
                  mesh=None, data_axis: str = "data",
                  spec_mode: str = "tp"):
+        bundle, self.loss_vocab_chunk = autotune_loss_vocab_chunk(
+            bundle, units, batch_units)
         self.bundle = bundle
         self.cfg = cfg
         self.batch_units = int(batch_units)
@@ -751,6 +794,8 @@ class HostEngine:
                 f"compress_mode={cfg.compress_mode!r} is scan-engine-only "
                 f"(the host loop trains dense on one device); use "
                 f"engine='scan' with a data x {cfg.pod_axis} mesh")
+        bundle, self.loss_vocab_chunk = autotune_loss_vocab_chunk(
+            bundle, units, batch_units)
         self.bundle = bundle
         self.cfg = cfg
         self.batch_units = int(batch_units)

@@ -131,6 +131,9 @@ def train_with_selection(
     eng = make_engine(engine, bundle, tc, units, val_units=val_units,
                       batch_units=batch_units, mesh=mesh,
                       data_axis=data_axis, spec_mode=spec_mode)
+    # the engine may rebuild the bundle at construction (RNN-T
+    # loss_vocab_chunk auto-tune); train and select on the tuned one
+    bundle = getattr(eng, "bundle", bundle)
     is_scan = isinstance(eng, EpochEngine)
     key = jax.random.PRNGKey(tc.seed) if key is None else key
     params = bundle.init_params(key)
@@ -148,7 +151,7 @@ def train_with_selection(
     # caches its executable (and the projections, closed over the jit)
     # across rounds
     resident = (ResidentSelector(bundle, tc.pgm, proj, mesh=mesh,
-                                 data_axis=data_axis)
+                                 data_axis=data_axis, log_fn=log_fn)
                 if resident_selection and method == "pgm" else None)
 
     hist = History()

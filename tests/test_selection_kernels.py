@@ -1,0 +1,227 @@
+"""Selection-round kernel parity + backend plumbing (DESIGN.md §9).
+
+The fused Pallas grad-sketch / Gram kernels are validated in interpret
+mode against the XLA streamed paths end to end: a full
+``ResidentSelector`` round with ``kernel_impl="pallas"`` must pick the
+*identical* subset as ``kernel_impl="xla"`` (scores to fp32 tolerance,
+indices bit-equal), on the LM and RNN-T smoke configs and under a
+4-device ``pgm_select_sharded`` round.  Also covered: the incremental-
+Cholesky OMP refit vs the dense oracle, the shared ``auto_vocab_chunk``
+resolver, the engine's ``loss_vocab_chunk`` auto-tune, and the
+once-per-build backend log.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import PGMConfig
+from repro.core.chunking import LANE, VMEM_BUDGET_BYTES, auto_vocab_chunk
+from repro.core.gm import gram, gram_omp
+from repro.core.lastlayer import make_proj_for
+from repro.core.pgm import ResidentSelector, partitioned_gm
+from repro.models.api import build_model
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _stacked_units(m, n_units, B=2, S=16, seed0=0):
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[m.make_batch(jax.random.PRNGKey(seed0 + i), B, S)
+          for i in range(n_units)])
+
+
+def _round_parity(arch, n_units=8):
+    """Full selection round, Pallas (interpret) vs XLA: stage-A scores
+    rtol 1e-4, selected indices identical, weights atol 1e-4."""
+    cfg = get_config(arch)
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    units = _stacked_units(m, n_units)
+    proj = make_proj_for(m, jax.random.PRNGKey(0), 16, 16)
+    pc = PGMConfig(subset_fraction=0.5, n_partitions=2,
+                   sketch_dim_h=16, sketch_dim_v=16)
+    out = {}
+    for impl in ("xla", "pallas"):
+        sel_obj = ResidentSelector(
+            m, dataclasses.replace(pc, kernel_impl=impl), proj)
+        out[impl] = (sel_obj.stage_a(params, units),
+                     sel_obj(params, units))
+    g_x, sel_x = out["xla"]
+    g_p, sel_p = out["pallas"]
+    scale = max(float(jnp.abs(g_x).max()), 1e-6)
+    assert np.allclose(np.asarray(g_p), np.asarray(g_x),
+                       atol=1e-4 * scale), \
+        float(jnp.abs(g_p - g_x).max() / scale)
+    assert np.asarray(sel_p.indices).tolist() == \
+        np.asarray(sel_x.indices).tolist()
+    assert np.allclose(np.asarray(sel_p.weights),
+                       np.asarray(sel_x.weights), atol=1e-4)
+
+
+def test_lm_round_pallas_matches_xla():
+    _round_parity("starcoder2-3b-smoke")
+
+
+def test_rnnt_round_pallas_matches_xla():
+    # stage A rides the fused loss's dw_out factors on both backends;
+    # what the pallas variant changes for RNN-T is the stage-B Gram build
+    _round_parity("rnnt-crdnn-smoke", n_units=4)
+
+
+@pytest.mark.slow
+def test_sharded_round_pallas_matches_xla():
+    """One 4-device ``pgm_select_sharded`` round with the Gram kernel
+    forced on (interpret under shard_map) vs the XLA reference."""
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.configs.base import PGMConfig
+        from repro.core.pgm import pgm_select_sharded
+        mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (64, 96), jnp.float32)
+        sels = {}
+        for impl in ("xla", "pallas"):
+            pc = PGMConfig(subset_fraction=0.5, n_partitions=4,
+                           kernel_impl=impl)
+            sels[impl] = pgm_select_sharded(mesh, "data", g, pc)
+        a, b = sels["xla"], sels["pallas"]
+        assert np.asarray(a.indices).tolist() == \\
+            np.asarray(b.indices).tolist()
+        assert np.allclose(np.asarray(a.weights), np.asarray(b.weights),
+                           atol=1e-4)
+        assert int(a.n_selected) > 0
+        print("SHARDED_KERNEL_PARITY_OK", int(a.n_selected))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert "SHARDED_KERNEL_PARITY_OK" in p.stdout
+
+
+# ---------------------------------------------------------------------------
+# Stage B: incremental Cholesky vs dense oracle
+# ---------------------------------------------------------------------------
+
+def test_gram_omp_chol_matches_dense_solver():
+    rng = np.random.default_rng(7)
+    g = jnp.asarray(rng.standard_normal((64, 48)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((48,)), jnp.float32)
+    K, c, tsq = gram(g), g @ t, t @ t
+    # budgets stay within rank(K)=48: beyond it the λ-ridge system is
+    # fp32-singular and the two solvers legitimately diverge
+    for budget in (1, 5, 17, 40):
+        for nonneg in (True, False):
+            for lam in (0.5, 1e-4):
+                a = gram_omp(K, c, tsq, budget, lam, 1e-10, nonneg,
+                             solver="chol")
+                b = gram_omp(K, c, tsq, budget, lam, 1e-10, nonneg,
+                             solver="dense")
+                assert a.indices.tolist() == b.indices.tolist(), \
+                    (budget, nonneg, lam)
+                assert np.allclose(np.asarray(a.weights),
+                                   np.asarray(b.weights), atol=1e-3)
+                assert float(abs(a.error - b.error)) < 1e-3
+
+
+def test_partitioned_gm_solver_parity_and_unknown_solver():
+    g = jax.random.normal(jax.random.PRNGKey(3), (32, 24), jnp.float32)
+    a = partitioned_gm(g, 4, 4, solver="chol")
+    b = partitioned_gm(g, 4, 4, solver="dense")
+    assert np.asarray(a.indices).tolist() == np.asarray(b.indices).tolist()
+    assert np.allclose(np.asarray(a.weights), np.asarray(b.weights),
+                       atol=1e-4)
+    with pytest.raises(ValueError, match="solver"):
+        gram_omp(gram(g), g @ g[0], g[0] @ g[0], 4, solver="lu")
+
+
+# ---------------------------------------------------------------------------
+# Backend resolution + config plumbing
+# ---------------------------------------------------------------------------
+
+def test_backend_resolution_off_tpu():
+    from repro.kernels.backend import pallas_flags, resolve_kernel_impl
+    assert resolve_kernel_impl("auto") in ("pallas", "xla")
+    if jax.default_backend() != "tpu":
+        assert resolve_kernel_impl("auto") == "xla"
+        assert pallas_flags("pallas") == (True, True)   # interpret mode
+        assert pallas_flags("xla") == (False, True)
+    with pytest.raises(ValueError, match="kernel_impl"):
+        resolve_kernel_impl("cuda")
+
+
+def test_resident_selector_logs_resolved_backend():
+    cfg = get_config("starcoder2-3b-smoke")
+    m = build_model(cfg)
+    proj = make_proj_for(m, jax.random.PRNGKey(0), 16, 16)
+    lines = []
+    pc = PGMConfig(sketch_dim_h=16, sketch_dim_v=16, kernel_impl="auto")
+    sel = ResidentSelector(m, pc, proj, log_fn=lines.append)
+    assert len(lines) == 1 and "requested=auto" in lines[0]
+    assert f"resolved={sel.kernel_impl}" in lines[0]
+    if jax.default_backend() != "tpu":
+        assert sel.kernel_impl == "xla"
+
+
+def test_train_cli_exposes_selection_kernels_flag():
+    from repro.launch.train import main  # noqa: F401 — import side checks
+    import repro.launch.train as lt
+    src = open(lt.__file__).read()
+    assert "--selection-kernels" in src and "kernel_impl" in src
+
+
+# ---------------------------------------------------------------------------
+# auto_vocab_chunk resolver + engine loss_vocab_chunk auto-tune
+# ---------------------------------------------------------------------------
+
+def test_auto_vocab_chunk_properties():
+    # full slab fits -> whole vocab (smoke shapes keep exact numerics)
+    assert auto_vocab_chunk(64, 277) == 277
+    # over budget -> lane-aligned, within budget, floored at one lane
+    rows, V = 4096, 262144
+    chunk = auto_vocab_chunk(rows, V)
+    assert chunk % LANE == 0
+    assert rows * chunk * 4 <= VMEM_BUDGET_BYTES
+    assert auto_vocab_chunk(10**9, V) == LANE          # floor
+    assert auto_vocab_chunk(1, V) == V                  # tiny rows: fits
+    # never wider than the vocab
+    assert auto_vocab_chunk(4096, 200) == 200
+
+
+def test_engine_autotunes_rnnt_loss_vocab_chunk():
+    from repro.train.engine import autotune_loss_vocab_chunk
+    cfg = get_config("rnnt-crdnn-smoke")
+    m = build_model(cfg)
+    units = _stacked_units(m, 4)
+    # smoke vocab: auto resolves to the full vocab, bundle untouched
+    b2, tuned = autotune_loss_vocab_chunk(m, units, batch_units=2)
+    assert b2 is m and tuned == cfg.rnnt.vocab_size
+    # explicit width always respected
+    cfg_fixed = dataclasses.replace(
+        cfg, rnnt=dataclasses.replace(cfg.rnnt, loss_vocab_chunk=16))
+    m_fixed = build_model(cfg_fixed)
+    b3, tuned3 = autotune_loss_vocab_chunk(m_fixed, units, batch_units=2)
+    assert b3 is m_fixed and tuned3 == 16
+    # big vocab: rebuilt on a lane-aligned chunk below the vocab
+    cfg_big = dataclasses.replace(
+        cfg, rnnt=dataclasses.replace(cfg.rnnt, vocab_size=65536))
+    m_big = build_model(cfg_big)
+    units_big = _stacked_units(m_big, 4)
+    b4, tuned4 = autotune_loss_vocab_chunk(m_big, units_big, batch_units=2)
+    assert 0 < tuned4 < 65536 and tuned4 % LANE == 0
+    assert b4.cfg.rnnt.loss_vocab_chunk == tuned4
+    # LM families: no-op
+    lm = build_model(get_config("starcoder2-3b-smoke"))
+    b5, tuned5 = autotune_loss_vocab_chunk(lm, units, batch_units=2)
+    assert b5 is lm and tuned5 is None

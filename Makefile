@@ -4,8 +4,9 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all test-archs bench bench-sharded bench-rnnt \
-	bench-compress bench-serve bench-archs bench-selection docs-check
+.PHONY: test-fast test-all test-archs test-chaos bench bench-sharded \
+	bench-rnnt bench-compress bench-serve bench-archs bench-selection \
+	docs-check
 
 # fast tier: everything not marked slow (~3-4 min) — the development loop
 test-fast:
@@ -14,10 +15,20 @@ test-fast:
 # tier-1 verify: the full suite, fail-fast (what the CI gate runs).
 # The forced host-device count makes the in-process mesh paths (and the
 # sharded-epoch parity tests, which also force it in their own
-# subprocesses) exercised under multiple devices.
+# subprocesses) exercised under multiple devices.  The chaos suite
+# (tests/test_chaos.py) is part of this tier — test-chaos below is the
+# targeted selector for iterating on fault-recovery work.
 test-all:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 	    $(PY) -m pytest -x -q
+
+# chaos tier: deterministic fault injection (train/faults.py) — every
+# injected fault must recover with the semantics documented in
+# DESIGN.md §10 (non-finite step guard, watchdog rollback, corrupt
+# checkpoint fallback, preemption + resume, prefetch retries, selection
+# kernel degradation)
+test-chaos:
+	$(PY) -m pytest -q -m chaos tests/test_chaos.py
 
 # per-arch engine + selection matrix (smokes, host-vs-scan parity, MoE
 # router-term definition, 4-device sharded smokes, resident selection

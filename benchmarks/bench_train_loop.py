@@ -5,9 +5,19 @@ validation unit) vs the scanned epoch engine (device-resident units,
 one donated jit(lax.scan) per epoch + one vmapped validation call) on
 the LM-smoke config.  Compile/warmup epochs are excluded — this measures
 the dispatch/transfer/per-example-eval overhead the engine removes,
-which is the training hot path once selection has paid for itself."""
+which is the training hot path once selection has paid for itself.
+
+Also measures the scanned engine with the in-scan non-finite step guard
+enabled (``nonfinite_guard``, DESIGN.md §10) against the unguarded
+engine: the guard adds two scalar ``isfinite`` checks (loss + the
+grad norm the clip already computes) and a leafwise select per step,
+all inside the jitted scan — the
+``guard_on_over_off`` ratio published in BENCH_train_loop.json is the
+evidence that it stays within noise of free (acceptance: <~3%
+overhead)."""
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List
 
@@ -74,39 +84,52 @@ def bench_train_loop(n_examples: int = 128, seq: int = 4,
         jax.block_until_ready(params)
         return params, opt_state, steps
 
-    # --- scanned engine ---
+    # --- scanned engine (guard off = the headline engine) ---
     eng = EpochEngine(bundle, tc, units, val_units=val, batch_units=1)
     s_params = bundle.init_params(key)
     s_opt = opt_init(s_params)
 
-    def scan_epoch(s_params, s_opt, epoch):
-        s_params, s_opt, losses = eng.run_epoch(s_params, s_opt, tc.lr,
-                                                eng.full_plan(epoch))
-        eng.validate(s_params)
+    # --- scanned engine with the non-finite step guard in the scan ---
+    tc_g = dataclasses.replace(tc, nonfinite_guard=True)
+    eng_g = EpochEngine(bundle, tc_g, units, val_units=val, batch_units=1)
+    g_params = bundle.init_params(key)
+    g_opt = opt_init(g_params)
+
+    def scan_epoch_on(engine, s_params, s_opt, epoch):
+        s_params, s_opt, losses = engine.run_epoch(
+            s_params, s_opt, tc.lr, engine.full_plan(epoch))
+        engine.validate(s_params)
         jax.block_until_ready(losses)
         return s_params, s_opt, int(losses.shape[0])
 
     for e in range(warmup_epochs):
         params, opt_state, _ = host_epoch(params, opt_state, e)
-        s_params, s_opt, _ = scan_epoch(s_params, s_opt, e)
+        s_params, s_opt, _ = scan_epoch_on(eng, s_params, s_opt, e)
+        g_params, g_opt, _ = scan_epoch_on(eng_g, g_params, g_opt, e)
 
     # interleaved per-epoch timing + best-of: container CPU speed drifts
-    # on the benchmark's timescale, so the two engines must sample the
-    # same noise and one slow epoch must not sink the steady-state number
-    host_rates, scan_rates = [], []
+    # on the benchmark's timescale, so the engines must sample the same
+    # noise and one slow epoch must not sink the steady-state number
+    host_rates, scan_rates, guard_rates = [], [], []
     for e in range(warmup_epochs, warmup_epochs + epochs):
         t0 = time.time()
         params, opt_state, s = host_epoch(params, opt_state, e)
         host_rates.append(s / (time.time() - t0))
         t0 = time.time()
-        s_params, s_opt, s2 = scan_epoch(s_params, s_opt, e)
+        s_params, s_opt, s2 = scan_epoch_on(eng, s_params, s_opt, e)
         scan_rates.append(s2 / (time.time() - t0))
+        t0 = time.time()
+        g_params, g_opt, s3 = scan_epoch_on(eng_g, g_params, g_opt, e)
+        guard_rates.append(s3 / (time.time() - t0))
     host_sps = max(host_rates)
     scan_sps = max(scan_rates)
+    guard_sps = max(guard_rates)
     # per-round speedups share the round's machine state; the median round
     # is the robust headline
     speedup = float(np.median([s / h for h, s in
                                zip(host_rates, scan_rates)]))
+    guard_ratio = float(np.median([g / s for s, g in
+                                   zip(scan_rates, guard_rates)]))
     return [
         {"name": "train_loop/host", "us_per_call": 1e6 / host_sps,
          "derived": f"steps_per_s={host_sps:.1f}",
@@ -117,6 +140,16 @@ def bench_train_loop(n_examples: int = 128, seq: int = 4,
         {"name": "train_loop/speedup", "us_per_call": 0.0,
          "derived": f"scan_over_host={speedup:.2f}x",
          "steps_per_s": 0.0, "speedup": speedup},
+        {"name": "train_loop/guard_off", "us_per_call": 1e6 / scan_sps,
+         "derived": f"steps_per_s={scan_sps:.1f}",
+         "steps_per_s": scan_sps},
+        {"name": "train_loop/guard_on", "us_per_call": 1e6 / guard_sps,
+         "derived": f"steps_per_s={guard_sps:.1f}",
+         "steps_per_s": guard_sps},
+        {"name": "train_loop/guard_overhead", "us_per_call": 0.0,
+         "derived": f"guard_on_over_off={guard_ratio:.3f}x",
+         "steps_per_s": 0.0, "speedup": guard_ratio,
+         "speedup_key": "guard_on_over_off"},
     ]
 
 

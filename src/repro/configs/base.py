@@ -273,6 +273,17 @@ class TrainConfig:
     compress_mode: str = "none"      # none | bf16 | topk
     compress_k_frac: float = 0.05    # top-k fraction per gradient leaf
     pod_axis: str = "pod"            # mesh axis name of the slow pod axis
+    # fault tolerance (DESIGN.md §10): with `nonfinite_guard` the step
+    # checks loss/grads for NaN/Inf *inside* the jitted epoch scan and
+    # gates a non-finite step into a bit-exact no-op (optim.gate_step,
+    # the same select that implements weight-0 padding rows) — no host
+    # sync, no retrace; skipped-step counts ride the donated carry.
+    # `max_skipped_steps` arms the host-side divergence watchdog: K
+    # consecutive skipped steps (or a non-finite train/val loss) roll
+    # the run back to the newest intact checkpoint with re-keyed batch
+    # plans.  0 disables the consecutive-skip trigger.
+    nonfinite_guard: bool = False
+    max_skipped_steps: int = 0
     pgm: PGMConfig = field(default_factory=PGMConfig)
 
 

@@ -169,6 +169,19 @@ def _impl_of(pgm_cfg) -> str:
     return getattr(pgm_cfg, "kernel_impl", "auto") or "auto"
 
 
+def _soft_random_selection(key, n_units: int, pgm_cfg) -> Selection:
+    """Degraded selection when every scorer backend failed: a uniform
+    random subset at the configured budget with unit weights — the same
+    Selection convention as ``baselines.random_subset`` (inlined here
+    because baselines imports this module).  Training proceeds on a
+    defensible subset instead of dying mid-run (DESIGN.md §10);
+    ``ResidentSelector.degraded_rounds`` counts how often."""
+    budget = max(int(pgm_cfg.subset_fraction * n_units), 1)
+    idx = jax.random.permutation(key, n_units)[:budget].astype(jnp.int32)
+    return Selection(idx, jnp.ones((budget,), jnp.float32),
+                     jnp.asarray(budget), jnp.zeros((1,)))
+
+
 class ResidentSelector:
     """Selection rounds over the epoch engine's device-resident units.
 
@@ -183,6 +196,14 @@ class ResidentSelector:
     re-materialized per call.  With a mesh, stage B additionally routes
     through ``pgm_select_sharded`` exactly like ``pgm_select``.
 
+    Failure ladder (DESIGN.md §10): a round that raises on the resolved
+    Pallas backend falls back *once* (warn-once) to the bit-identical
+    XLA path — both stage A (re-jitted) and stage B read the updated
+    ``kernel_impl`` — and if the scorer still fails the round degrades
+    to a soft-random subset (``on_failure="soft_random"``, the default)
+    rather than killing a multi-epoch run; ``on_failure="raise"``
+    restores fail-fast semantics for tests and debugging.
+
     Usage (see ``train/loop.py``)::
 
         selector = ResidentSelector(bundle, pgm_cfg, proj, mesh=mesh)
@@ -192,21 +213,35 @@ class ResidentSelector:
     def __init__(self, bundle, pgm_cfg, proj: Optional[Projections] = None,
                  *, chunk_units: Optional[int] = None, mesh=None,
                  data_axis: str = "data", vocab_chunk: int = 8192,
-                 log_fn=None):
+                 on_failure: str = "soft_random", log_fn=None):
         self.bundle = bundle
         self.cfg = pgm_cfg
         self.mesh = mesh
         self.data_axis = data_axis
-        exact = not pgm_cfg.use_sketch
-        rt = _router_term_for(bundle, pgm_cfg)
+        self.on_failure = on_failure
+        self._log = log_fn or (lambda s: None)
+        self._proj = proj
+        self._chunk_units = chunk_units
+        self._vocab_chunk = vocab_chunk
+        self._exact = not pgm_cfg.use_sketch
+        self._rt = _router_term_for(bundle, pgm_cfg)
         impl = _impl_of(pgm_cfg)
         # resolve once at build time and surface the decision: "auto" is
         # data-dependent (TPU vs host), and a silent wrong backend is
         # exactly the kind of perf bug a log line catches
         self.kernel_impl = resolve_kernel_impl(impl)
+        self._fell_back = False
+        self.degraded_rounds = 0
+        self._round = 0
         if log_fn is not None:
             log_fn(f"selection kernels: requested={impl} "
                    f"resolved={self.kernel_impl}")
+        self._build_stage_a(impl)
+
+    def _build_stage_a(self, impl):
+        bundle, proj = self.bundle, self._proj
+        chunk_units, vocab_chunk = self._chunk_units, self._vocab_chunk
+        exact, rt = self._exact, self._rt
 
         def stage_a(params, units):
             return units_gradients_batched(
@@ -216,14 +251,15 @@ class ResidentSelector:
 
         # one jit for train and val units alike: the cache keys on unit
         # shapes, so each distinct corpus compiles once and every later
-        # round is a cache hit
+        # round is a cache hit (a kernel fallback rebuilds the jit, so
+        # the replacement backend traces fresh)
         self._stage_a = jax.jit(stage_a)
 
     def stage_a(self, params, units) -> jax.Array:
         """(n_units, D) stage-A gradient representations, jit-cached."""
         return self._stage_a(params, units)
 
-    def __call__(self, params, units, val_units=None) -> Selection:
+    def _select_round(self, params, units, val_units) -> Selection:
         g = self._stage_a(params, units)
         g_val = None
         if self.cfg.val_matching:
@@ -231,6 +267,33 @@ class ResidentSelector:
             g_val = _val_target(gv, g.shape[0], self.cfg)
         return _stage_b(g, self.cfg, g_val=g_val, mesh=self.mesh,
                         data_axis=self.data_axis)
+
+    def __call__(self, params, units, val_units=None) -> Selection:
+        self._round += 1
+        try:
+            return self._select_round(params, units, val_units)
+        except Exception as err:
+            if self.kernel_impl == "pallas" and not self._fell_back:
+                self._fell_back = True
+                self._log(f"warning: Pallas selection round failed "
+                          f"({err}); falling back to the bit-identical "
+                          f"XLA path for all remaining rounds")
+                self.kernel_impl = "xla"
+                self.cfg = dataclasses.replace(self.cfg,
+                                               kernel_impl="xla")
+                self._build_stage_a("xla")
+                try:
+                    return self._select_round(params, units, val_units)
+                except Exception as err2:
+                    err = err2
+            if self.on_failure != "soft_random":
+                raise err
+            self.degraded_rounds += 1
+            n_units = jax.tree.leaves(units)[0].shape[0]
+            self._log(f"warning: selection scorer failed ({err}); "
+                      f"degrading this round to a soft-random subset")
+            return _soft_random_selection(jax.random.PRNGKey(self._round),
+                                          n_units, self.cfg)
 
 
 def _mesh_divides(mesh, axis: str, n_partitions: int, n_units: int) -> bool:

@@ -23,16 +23,21 @@ slot, so callers that re-key (the loop, after each selection round)
 should call ``invalidate()`` to drop pending work — otherwise orphans
 accumulate until the buffer is permanently full.
 
-Failure semantics: a builder that raises on the worker thread must not
-strand the consumer or leak the thread.  ``get()`` re-raises the
-builder's exception at the consumer (and frees the buffer slot, so the
-caller can retry synchronously); an *orphaned* failed build is simply
-dropped by ``invalidate()``; ``close()`` — also run by ``__del__`` and
-the context manager — cancels what hasn't started and joins the worker
-thread, and is idempotent.
+Failure semantics: a *transient* builder failure (flaky storage, an
+injected chaos fault) is retried in place — ``retries`` attempts with
+capped exponential backoff — on whichever thread runs the build, the
+worker or the ``get()`` fallback, so both paths degrade identically
+(DESIGN.md §10).  A builder that keeps failing must not strand the
+consumer or leak the thread: ``get()`` re-raises the final exception at
+the consumer (and frees the buffer slot, so the caller can retry
+synchronously); an *orphaned* failed build is simply dropped by
+``invalidate()``; ``close()`` — also run by ``__del__`` and the context
+manager — cancels what hasn't started and joins the worker thread, and
+is idempotent.
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, Hashable
 
@@ -50,16 +55,38 @@ class PlanPrefetcher:
     re-raises its exception from ``get()``.
     """
 
-    def __init__(self, max_pending: int = 2):
+    def __init__(self, max_pending: int = 2, retries: int = 2,
+                 backoff_s: float = 0.05, max_backoff_s: float = 2.0):
         self.max_pending = int(max_pending)
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
         self._pending: Dict[Hashable, Future] = {}
         self._ex = ThreadPoolExecutor(max_workers=1,
                                       thread_name_prefix="plan-prefetch")
         self._closed = False
         #: observability: get() calls served from the buffer / built
-        #: synchronously (used by tests and the benchmark harness)
+        #: synchronously, and builds recovered by a retry (used by tests
+        #: and the benchmark harness)
         self.hits = 0
         self.misses = 0
+        self.retried = 0
+
+    def _build_with_retries(self, build: Callable[[], object]):
+        """Run ``build``, retrying transient failures ``retries`` times
+        with capped exponential backoff before letting the exception
+        propagate.  Builders are pure, so a retry returns exactly the
+        plan a clean first attempt would have."""
+        delay = self.backoff_s
+        for attempt in range(self.retries + 1):
+            try:
+                return build()
+            except Exception:
+                if attempt == self.retries:
+                    raise
+                self.retried += 1
+                time.sleep(delay)
+                delay = min(delay * 2, self.max_backoff_s)
 
     def schedule(self, key: Hashable, build: Callable[[], object]) -> bool:
         """Queue ``build`` for ``key``.  Idempotent: an already-scheduled
@@ -70,7 +97,8 @@ class PlanPrefetcher:
             return True
         if self._closed or len(self._pending) >= self.max_pending:
             return False
-        self._pending[key] = self._ex.submit(build)
+        self._pending[key] = self._ex.submit(self._build_with_retries,
+                                             build)
         return True
 
     def get(self, key: Hashable, build: Callable[[], object]):
@@ -82,7 +110,7 @@ class PlanPrefetcher:
         fut = self._pending.pop(key, None)
         if fut is None:
             self.misses += 1
-            return build()
+            return self._build_with_retries(build)
         self.hits += 1
         return fut.result()        # re-raises the worker's exception
 

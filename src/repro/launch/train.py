@@ -185,6 +185,15 @@ def main():
                          "(PGMConfig.kernel_impl): fused Pallas "
                          "grad-sketch + Gram kernels vs the XLA "
                          "streamed paths; auto = pallas on TPU only")
+    ap.add_argument("--nonfinite-guard", action="store_true",
+                    help="gate NaN/Inf steps off inside the jitted step "
+                         "(bit-exact no-op, no host sync) and count them "
+                         "in the epoch metrics (DESIGN.md §10)")
+    ap.add_argument("--max-skipped-steps", type=int, default=0,
+                    help="divergence watchdog: this many *consecutive* "
+                         "guarded-off steps triggers a rollback to the "
+                         "last good checkpoint with a re-keyed batch "
+                         "plan (0 = never; requires --nonfinite-guard)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -195,6 +204,8 @@ def main():
         seed=args.seed,
         compress_mode=args.compress_mode,
         compress_k_frac=args.compress_k_frac,
+        nonfinite_guard=args.nonfinite_guard,
+        max_skipped_steps=args.max_skipped_steps,
         pgm=PGMConfig(subset_fraction=args.subset,
                       n_partitions=args.partitions,
                       select_every=args.select_every,

@@ -163,21 +163,31 @@ class Request:
     """One serving request.  ``inputs`` holds host arrays: ``tokens``
     (Lp,) int32 for LM families, ``feats`` (T, F) float32 for RNN-T.
     ``arrival_s`` is the offered-load arrival time relative to
-    ``SlotEngine.run``'s start (0 = already queued)."""
+    ``SlotEngine.run``'s start (0 = already queued).  ``deadline_s``
+    (seconds after arrival, None = no deadline) bounds total latency: a
+    request still queued or still decoding past its deadline is evicted
+    with ``status="expired"`` instead of holding a slot forever."""
 
     uid: int
     inputs: Dict[str, np.ndarray]
     max_new_tokens: int
     arrival_s: float = 0.0
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
 class Completion:
+    """Terminal record for one request.  ``status`` is ``"ok"`` (decoded
+    to eos/budget), ``"rejected"`` (host queue overflow — backpressure,
+    the request never held a slot) or ``"expired"`` (deadline passed in
+    queue or mid-decode; ``tokens`` holds whatever was emitted)."""
+
     uid: int
     tokens: List[int]
     arrival_s: float
     admit_s: float
     done_s: float
+    status: str = "ok"
 
     @property
     def latency_s(self) -> float:
@@ -226,7 +236,9 @@ class SlotEngine:
                  sync_every: int = 4,
                  max_symbols: int = 8,
                  bucket_min: int = 8,
-                 seed: int = 0):
+                 seed: int = 0,
+                 max_queue: Optional[int] = None,
+                 clock=time.time):
         cfg = bundle.cfg
         if cfg.family in ("vlm", "encdec"):
             raise ValueError(f"SlotEngine serves LM and RNN-T families, "
@@ -243,8 +255,16 @@ class SlotEngine:
         self.bucket_min = int(bucket_min)
         self.is_rnnt = cfg.family == "rnnt"
         self._key = jax.random.PRNGKey(seed)
+        # bounded host queue: None = unbounded (legacy); a bound turns
+        # overflow into an immediate backpressure rejection instead of
+        # unbounded host memory growth under offered overload
+        self.max_queue = None if max_queue is None else int(max_queue)
+        # injectable for deterministic deadline tests; must be monotonic
+        self._clock = clock
         self.n_decode_dispatches = 0
         self.n_admits = 0
+        self.n_rejected = 0
+        self.n_expired = 0
 
         if self.is_rnnt:
             red = cfg.rnnt.time_reduction
@@ -286,6 +306,12 @@ class SlotEngine:
 
         self._admit_jit = jax.jit(self._admit_fn, donate_argnums=(1,))
         self._decode_jit = jax.jit(self._decode_fn, donate_argnums=(1,))
+        # deadline eviction: clear live flags for a host-computed kill
+        # mask — the slot becomes a dead-slot no-op on the next scan,
+        # exactly like a finished request (no retrace, no state rebuild)
+        self._expire_jit = jax.jit(
+            lambda state, kill: dict(state, live=state["live"] & ~kill),
+            donate_argnums=(0,))
 
     # -- buckets --------------------------------------------------------
     def _bucket_of(self, length: int) -> int:
@@ -424,26 +450,65 @@ class SlotEngine:
             jnp.asarray(budget, jnp.int32), sub)
         self.n_admits += 1
 
+    def _expired(self, req: Request, now: float) -> bool:
+        return (req.deadline_s is not None
+                and now > req.arrival_s + req.deadline_s)
+
     def run(self, requests: Sequence[Request]) -> List[Completion]:
         """Serve ``requests`` (offered load via ``arrival_s``) to
         completion.  Admission, decoding and eviction interleave: freed
-        slots are refilled between decode scans without recompiling."""
-        pending = collections.deque(
+        slots are refilled between decode scans without recompiling.
+        Arrivals land in a host queue bounded by ``max_queue`` (overflow
+        -> ``status="rejected"`` backpressure); a request whose
+        ``deadline_s`` passes while queued is dropped without ever
+        taking a slot, and one that expires mid-decode is evicted as a
+        dead-slot no-op with its partial tokens (``status="expired"``)."""
+        clock = self._clock
+        schedule = collections.deque(
             sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
+        queue: "collections.deque[Request]" = collections.deque()
         active: Dict[int, Tuple[Request, float]] = {}
         free = list(range(self.n_slots))
         completions: List[Completion] = []
-        t0 = time.time()
-        while pending or active:
-            now = time.time() - t0
-            while free and pending and pending[0].arrival_s <= now:
-                req = pending.popleft()
+        t0 = clock()
+        while schedule or queue or active:
+            now = clock() - t0
+            # arrivals -> bounded host queue; overflow is rejected NOW
+            # (backpressure) instead of growing the queue without bound
+            while schedule and schedule[0].arrival_s <= now:
+                req = schedule.popleft()
+                if (self.max_queue is not None
+                        and len(queue) >= self.max_queue):
+                    self.n_rejected += 1
+                    completions.append(Completion(
+                        uid=req.uid, tokens=[], arrival_s=req.arrival_s,
+                        admit_s=float("nan"), done_s=clock() - t0,
+                        status="rejected"))
+                    continue
+                queue.append(req)
+            # queued requests whose deadline passed never take a slot
+            now = clock() - t0
+            kept: "collections.deque[Request]" = collections.deque()
+            for req in queue:
+                if self._expired(req, now):
+                    self.n_expired += 1
+                    completions.append(Completion(
+                        uid=req.uid, tokens=[], arrival_s=req.arrival_s,
+                        admit_s=float("nan"), done_s=clock() - t0,
+                        status="expired"))
+                else:
+                    kept.append(req)
+            queue = kept
+            while free and queue:
+                req = queue.popleft()
                 slot = free.pop()
                 self._admit(slot, req)
-                active[slot] = (req, time.time() - t0)
+                active[slot] = (req, clock() - t0)
             if not active:
-                # idle: nothing decoding, next arrival is in the future
-                time.sleep(min(max(pending[0].arrival_s - now, 0.0), 0.005))
+                if schedule:
+                    # idle: nothing decoding, next arrival in the future
+                    time.sleep(min(max(schedule[0].arrival_s - now, 0.0),
+                                   0.005))
                 continue
             self._key, sub = jax.random.split(self._key)
             self._state = self._decode_jit(self.params, self._state, sub)
@@ -451,14 +516,28 @@ class SlotEngine:
             # ONE host sync per scan: live flags + emission counts
             live = np.asarray(self._state["live"])
             n_out = np.asarray(self._state["n_out"])
+            # deadline sweep over active slots: expired ones are killed
+            # on device (live cleared) and read out below like finished
+            now = clock() - t0
+            kill = np.zeros(self.n_slots, bool)
+            for slot, (req, _) in active.items():
+                if live[slot] and self._expired(req, now):
+                    kill[slot] = True
+            if kill.any():
+                self._state = self._expire_jit(self._state,
+                                               jnp.asarray(kill))
+                live = live & ~kill
             for slot in [s for s in list(active) if not live[s]]:
                 req, admit_s = active.pop(slot)
                 toks = np.asarray(
                     self._state["out"][slot])[: int(n_out[slot])]
+                if kill[slot]:
+                    self.n_expired += 1
                 completions.append(Completion(
                     uid=req.uid, tokens=[int(t) for t in toks],
                     arrival_s=req.arrival_s, admit_s=admit_s,
-                    done_s=time.time() - t0))
+                    done_s=clock() - t0,
+                    status="expired" if kill[slot] else "ok"))
                 free.append(slot)
         return completions
 

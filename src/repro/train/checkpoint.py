@@ -33,6 +33,19 @@ def _flatten(tree, prefix="") -> Dict[str, Any]:
     return {jax.tree_util.keystr(path): leaf for path, leaf in flat}, treedef
 
 
+def _prune_tmp_dirs(ckpt_dir: str):
+    """Remove ``.tmp_*`` staging dirs left behind by a crash mid-``save``.
+
+    The atomic rename protocol means a tmp dir is garbage the moment the
+    process that created it is gone; pruning on the next ``save``/
+    ``restore`` keeps a crash loop from accumulating partial writes."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    for d in os.listdir(ckpt_dir):
+        if d.startswith(".tmp_"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
 def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
          mesh_shape: Optional[Dict[str, int]] = None,
          compress_mode: Optional[str] = None):
@@ -46,10 +59,9 @@ def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
     resume under a different compressor can be flagged instead of
     silently mixing residual semantics."""
     os.makedirs(ckpt_dir, exist_ok=True)
+    _prune_tmp_dirs(ckpt_dir)
     tmp = os.path.join(ckpt_dir, f".tmp_{step}")
     final = os.path.join(ckpt_dir, f"step_{step}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
     os.makedirs(tmp)
 
     host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
@@ -110,6 +122,7 @@ def restore(ckpt_dir: str, step: Optional[int] = None, template=None,
     """Load a checkpoint.  ``template``: pytree prototype (for structure);
     ``sharding_fn(path, array) -> Sharding|None`` enables elastic
     resharding onto a new mesh.  Returns (tree, manifest)."""
+    _prune_tmp_dirs(ckpt_dir)
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
@@ -119,11 +132,14 @@ def restore(ckpt_dir: str, step: Optional[int] = None, template=None,
     data = np.load(os.path.join(d, "arrays.npz"))
     arrays = {k: data[k] for k in data.files}
     if verify:
-        for k, meta in manifest["arrays"].items():
-            h = hashlib.sha256(
-                np.ascontiguousarray(arrays[k]).tobytes()).hexdigest()
-            if h != meta["sha256"]:
-                raise IOError(f"checkpoint corruption detected at {k}")
+        bad = [k for k, meta in manifest["arrays"].items()
+               if k not in arrays
+               or hashlib.sha256(np.ascontiguousarray(arrays[k])
+                                 .tobytes()).hexdigest() != meta["sha256"]]
+        if bad:
+            raise IOError(
+                f"checkpoint corruption detected in {len(bad)} array(s): "
+                + ", ".join(sorted(bad)))
     if template is None:
         return arrays, manifest
     flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
@@ -140,6 +156,45 @@ def restore(ckpt_dir: str, step: Optional[int] = None, template=None,
         leaves.append(a)
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(template), leaves), manifest
+
+
+def restore_latest_intact(ckpt_dir: str, template=None, sharding_fn=None,
+                          verify: bool = True, template_fn=None,
+                          log_fn=None):
+    """Restore the newest checkpoint that passes checksum verification.
+
+    Walks ``step_<n>`` dirs newest-first; a corrupted (or unreadable)
+    checkpoint is logged and skipped instead of killing the run — the
+    fault-model contract (DESIGN.md §10) is that a bad latest checkpoint
+    degrades resume to the previous intact one.  ``template_fn(manifest)``
+    lets the caller build the restore template per-checkpoint (e.g. the
+    ``err`` error-feedback leaf only exists in pod-mode saves); it takes
+    precedence over ``template``.  Returns ``(tree, manifest)``; raises
+    ``FileNotFoundError`` if no checkpoints exist and ``IOError`` if none
+    is intact."""
+    _prune_tmp_dirs(ckpt_dir)
+    steps = sorted((int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                    if d.startswith("step_")), reverse=True) \
+        if os.path.isdir(ckpt_dir) else []
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    last_err: Optional[BaseException] = None
+    for step in steps:
+        try:
+            tpl = template
+            if template_fn is not None:
+                tpl = template_fn(read_manifest(ckpt_dir, step))
+            return restore(ckpt_dir, step, template=tpl,
+                           sharding_fn=sharding_fn, verify=verify)
+        except Exception as e:   # corruption surfaces as IOError (sha256
+            last_err = e         # mismatch), BadZipFile/zlib.error (zip
+            # decode) or KeyError (missing array) depending on where the
+            # damage landed — all mean "this step is unusable, try older"
+            if log_fn is not None:
+                log_fn(f"[ckpt] step_{step} unusable ({e}); "
+                       f"falling back to previous checkpoint")
+    raise IOError(f"no intact checkpoint in {ckpt_dir} "
+                  f"(tried steps {steps})") from last_err
 
 
 class AsyncCheckpointer:

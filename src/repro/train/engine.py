@@ -54,7 +54,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import TrainConfig
 from repro.data.pipeline import epoch_plan, subset_epoch_plan
 from repro.train.compress import compressed_psum, init_error_state
-from repro.train.optim import clip_by_global_norm, gate_step, make_update_for
+from repro.train.optim import (clip_by_global_norm, gate_step,
+                               make_update_for)
 
 
 class PodSpec(NamedTuple):
@@ -118,8 +119,20 @@ def make_step_core(bundle, cfg: TrainConfig, shard=None, pod=None):
     to the one-level engines; for MoE the load-balance term is nonlinear
     in batch composition, so per-pod aux is a deliberate semantic choice,
     not a parity-preserving identity.
+
+    Non-finite guard (``cfg.nonfinite_guard``, DESIGN.md §10): the step
+    additionally checks loss and (clipped) gradients for NaN/Inf in-jit
+    and folds the result into the ``step_on`` gate — a poisoned batch
+    becomes a bit-exact no-op exactly like a weight-0 padding row (same
+    ``gate_step`` select, composing with pod-mode error-feedback
+    gating), its metrics are zeroed, and ``metrics["skipped"]`` reports
+    whether a *live* step was suppressed.  The check is trace-static:
+    guard on/off never retraces within a run, and a guarded run on
+    all-finite data is bitwise identical to an unguarded one (the gate
+    selects the new state everywhere).
     """
     _, opt_update = make_update_for(cfg)
+    guard = bool(getattr(cfg, "nonfinite_guard", False))
 
     if pod is None:
         def step(params, opt_state, batch, lr, step_on=None):
@@ -133,12 +146,25 @@ def make_step_core(bundle, cfg: TrainConfig, shard=None, pod=None):
             (l, metrics), grads = jax.value_and_grad(loss,
                                                      has_aux=True)(params)
             grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            if guard:
+                # the clip already paid for the global norm: any NaN/Inf
+                # in the raw grads poisons the sum-of-squares, so one
+                # scalar isfinite replaces a leafwise tree sweep (a
+                # finite tree whose norm *overflows* is also gated off —
+                # its clip scale would be 0, a degenerate step)
+                finite = jnp.isfinite(l) & jnp.isfinite(gnorm)
+                ok = finite if step_on is None else step_on & finite
+            else:
+                ok = step_on
             params, opt_state = opt_update(params, grads, opt_state, lr,
-                                           step_on=step_on)
+                                           step_on=ok)
             metrics = dict(metrics, grad_norm=gnorm)
-            if step_on is not None:
-                metrics = {k: jnp.where(step_on, v, jnp.zeros_like(v))
+            if ok is not None:
+                metrics = {k: jnp.where(ok, v, jnp.zeros_like(v))
                            for k, v in metrics.items()}
+            if guard:
+                live = jnp.bool_(True) if step_on is None else step_on
+                metrics["skipped"] = live & ~finite
             return params, opt_state, metrics
 
         return step
@@ -188,15 +214,26 @@ def make_step_core(bundle, cfg: TrainConfig, shard=None, pod=None):
             per_pod, in_axes=(0, 0), out_axes=(None, 0, None),
             axis_name=pod.axis, spmd_axis_name=pod.axis)(bp, err)
         grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        if guard:
+            # the check runs on the post-collective gradients: a NaN/Inf
+            # in any pod poisons the psum, so every pod gates off the
+            # same step (and rolls its error-feedback residuals back)
+            finite = jnp.isfinite(metrics["loss"]) & jnp.isfinite(gnorm)
+            ok = finite if step_on is None else step_on & finite
+        else:
+            ok = step_on
         params, opt_state = opt_update(params, grads, opt_state, lr,
-                                       step_on=step_on)
+                                       step_on=ok)
         metrics = dict(metrics, grad_norm=gnorm)
-        if step_on is not None:
-            # padding batches advance nothing: the error-feedback state is
-            # selected back bit-exactly, like params/opt_state
-            new_err = gate_step(step_on, new_err, err)
-            metrics = {k: jnp.where(step_on, v, jnp.zeros_like(v))
+        if ok is not None:
+            # padding/guarded batches advance nothing: the error-feedback
+            # state is selected back bit-exactly, like params/opt_state
+            new_err = gate_step(ok, new_err, err)
+            metrics = {k: jnp.where(ok, v, jnp.zeros_like(v))
                        for k, v in metrics.items()}
+        if guard:
+            live = jnp.bool_(True) if step_on is None else step_on
+            metrics["skipped"] = live & ~finite
         return params, opt_state, metrics, new_err
 
     return pod_step
@@ -394,6 +431,17 @@ class EpochEngine:
         #: number of times an epoch executable (per-epoch or chunked)
         #: has been traced/compiled
         self.n_epoch_traces = 0
+        #: non-finite step guard (DESIGN.md §10): trace-static, so the
+        #: guarded engine compiles once like the unguarded one
+        self.guard = bool(getattr(cfg, "nonfinite_guard", False))
+        #: plan re-keying salt: the divergence watchdog bumps this on
+        #: rollback so the replayed epochs draw a fresh batch order
+        #: (plans stay pure functions of (seed, salt, epoch))
+        self.plan_salt = 0
+        #: per-step skip mask (device array) / total skip count of the
+        #: last run_epoch/run_epochs dispatch; None when the guard is off
+        self.last_skipped: Optional[jax.Array] = None
+        self.last_n_skipped: Optional[jax.Array] = None
         if self._pod is not None and \
                 (self.batch_units * self.unit_size) % self.n_pods:
             raise ValueError(
@@ -404,9 +452,12 @@ class EpochEngine:
                                    pod=self._pod)
         unit_size = self.unit_size
         pod = self._pod
+        guard = self.guard
 
         def make_body(lr):
             def body(carry, xs):
+                if guard:
+                    *carry, nsk = carry
                 if pod is None:
                     p, s = carry
                 else:
@@ -426,21 +477,42 @@ class EpochEngine:
                                  * jnp.repeat(w, unit_size))
                 if pod is None:
                     p, s, metrics = step_core(p, s, batch, lr, step_on=live)
-                    return (p, s), metrics["loss"]
-                p, s, metrics, err = step_core(p, s, batch, lr, err,
-                                               step_on=live)
-                return (p, s, err), metrics["loss"]
+                    carry = (p, s)
+                else:
+                    p, s, metrics, err = step_core(p, s, batch, lr, err,
+                                                   step_on=live)
+                    carry = (p, s, err)
+                if not guard:
+                    return carry, metrics["loss"]
+                # the skipped-step counter rides the donated carry; the
+                # per-step mask joins the ys so the host watchdog can see
+                # *consecutive* skips without an extra sync
+                sk = metrics["skipped"]
+                nsk = nsk + sk.astype(jnp.int32)
+                return carry + (nsk,), (metrics["loss"],
+                                        sk.astype(jnp.float32))
 
             return body
+
+        def scan_epoch(carry, lr, xs):
+            """One epoch scan; normalizes the guard-on/-off carry and ys
+            shapes to ``(state_carry, losses, skipped, n_skipped)`` with
+            ``skipped/n_skipped = None`` when the guard is off."""
+            if not guard:
+                carry, losses = jax.lax.scan(make_body(lr), carry, xs)
+                return carry, losses, None, None
+            (*carry, nsk), (losses, skipped) = jax.lax.scan(
+                make_body(lr), tuple(carry) + (jnp.zeros((), jnp.int32),),
+                xs)
+            return tuple(carry), losses, skipped, nsk
 
         if pod is None:
             def run(params, opt_state, batch_idx, batch_w, lr):
                 self.n_epoch_traces += 1  # python side effect: counts traces
                 params, opt_state = self._constrain_state(params, opt_state)
-                (params, opt_state), losses = jax.lax.scan(
-                    make_body(lr), (params, opt_state),
-                    (batch_idx, batch_w))
-                return params, opt_state, losses
+                (params, opt_state), losses, skipped, nsk = scan_epoch(
+                    (params, opt_state), lr, (batch_idx, batch_w))
+                return params, opt_state, losses, skipped, nsk
 
             # donate (params, opt_state): the scan carry re-uses their
             # buffers
@@ -450,10 +522,9 @@ class EpochEngine:
                 self.n_epoch_traces += 1
                 params, opt_state = self._constrain_state(params, opt_state)
                 err = self._constrain_err(err)
-                (params, opt_state, err), losses = jax.lax.scan(
-                    make_body(lr), (params, opt_state, err),
-                    (batch_idx, batch_w))
-                return params, opt_state, err, losses
+                (params, opt_state, err), losses, skipped, nsk = scan_epoch(
+                    (params, opt_state, err), lr, (batch_idx, batch_w))
+                return params, opt_state, err, losses, skipped, nsk
 
             # the per-pod error-feedback residuals join the donated carry
             self._run = jax.jit(run, donate_argnums=(0, 1, 2))
@@ -474,6 +545,26 @@ class EpochEngine:
 
         self._validate = jax.jit(val_mean)
 
+        def chunk_epoch_body(state_carry, val_dev, lr_c, prev, xs):
+            """Shared inner body of the chunked dispatch: one epoch scan
+            + validation + newbob.  Returns the updated state carry, lr,
+            prev, the epoch skip count, and this epoch's ys (losses
+            [, skip mask], val loss, lr)."""
+            state_carry, losses, skipped, nsk = scan_epoch(state_carry,
+                                                           lr_c, xs)
+            p = state_carry[0]
+            if val_dev is not None:
+                vl = val_mean(p, val_dev)
+                lr_n, prev = newbob_step(
+                    lr_c, prev, vl, cfg.anneal_factor,
+                    cfg.improvement_threshold)
+            else:
+                vl = jnp.float32(jnp.nan)
+                lr_n = lr_c
+            ys = ((losses, vl, lr_n) if not guard
+                  else (losses, skipped, vl, lr_n))
+            return state_carry, lr_n, prev, nsk, ys
+
         if pod is None:
             def run_chunk(params, opt_state, val_dev, batch_idx, batch_w,
                           lr, prev_loss):
@@ -485,24 +576,29 @@ class EpochEngine:
                 params, opt_state = self._constrain_state(params, opt_state)
 
                 def epoch(carry, xs):
-                    p, s, lr_c, prev = carry
-                    idx, w = xs
-                    (p, s), losses = jax.lax.scan(make_body(lr_c), (p, s),
-                                                  (idx, w))
-                    if val_dev is not None:
-                        vl = val_mean(p, val_dev)
-                        lr_n, prev = newbob_step(
-                            lr_c, prev, vl, cfg.anneal_factor,
-                            cfg.improvement_threshold)
+                    if guard:
+                        p, s, lr_c, prev, nsk = carry
                     else:
-                        vl = jnp.float32(jnp.nan)
-                        lr_n = lr_c
-                    return (p, s, lr_n, prev), (losses, vl, lr_n)
+                        p, s, lr_c, prev = carry
+                    (p, s), lr_n, prev, nsk_e, ys = chunk_epoch_body(
+                        (p, s), val_dev, lr_c, prev, xs)
+                    if guard:
+                        return (p, s, lr_n, prev, nsk + nsk_e), ys
+                    return (p, s, lr_n, prev), ys
 
-                (params, opt_state, lr, prev_loss), (losses, vls, lrs) = \
-                    jax.lax.scan(epoch, (params, opt_state, lr, prev_loss),
-                                 (batch_idx, batch_w))
-                return params, opt_state, losses, vls, lrs, lr, prev_loss
+                carry0 = (params, opt_state, lr, prev_loss)
+                if guard:
+                    carry0 = carry0 + (jnp.zeros((), jnp.int32),)
+                carry, ys = jax.lax.scan(epoch, carry0,
+                                         (batch_idx, batch_w))
+                if guard:
+                    params, opt_state, lr, prev_loss, nsk = carry
+                    losses, skipped, vls, lrs = ys
+                else:
+                    params, opt_state, lr, prev_loss = carry
+                    (losses, vls, lrs), skipped, nsk = ys, None, None
+                return (params, opt_state, losses, skipped, nsk, vls, lrs,
+                        lr, prev_loss)
 
             self._run_chunk = jax.jit(run_chunk, donate_argnums=(0, 1))
         else:
@@ -516,26 +612,29 @@ class EpochEngine:
                 err = self._constrain_err(err)
 
                 def epoch(carry, xs):
-                    p, s, e, lr_c, prev = carry
-                    idx, w = xs
-                    (p, s, e), losses = jax.lax.scan(make_body(lr_c),
-                                                     (p, s, e), (idx, w))
-                    if val_dev is not None:
-                        vl = val_mean(p, val_dev)
-                        lr_n, prev = newbob_step(
-                            lr_c, prev, vl, cfg.anneal_factor,
-                            cfg.improvement_threshold)
+                    if guard:
+                        p, s, e, lr_c, prev, nsk = carry
                     else:
-                        vl = jnp.float32(jnp.nan)
-                        lr_n = lr_c
-                    return (p, s, e, lr_n, prev), (losses, vl, lr_n)
+                        p, s, e, lr_c, prev = carry
+                    (p, s, e), lr_n, prev, nsk_e, ys = chunk_epoch_body(
+                        (p, s, e), val_dev, lr_c, prev, xs)
+                    if guard:
+                        return (p, s, e, lr_n, prev, nsk + nsk_e), ys
+                    return (p, s, e, lr_n, prev), ys
 
-                (params, opt_state, err, lr, prev_loss), \
-                    (losses, vls, lrs) = jax.lax.scan(
-                        epoch, (params, opt_state, err, lr, prev_loss),
-                        (batch_idx, batch_w))
-                return (params, opt_state, err, losses, vls, lrs, lr,
-                        prev_loss)
+                carry0 = (params, opt_state, err, lr, prev_loss)
+                if guard:
+                    carry0 = carry0 + (jnp.zeros((), jnp.int32),)
+                carry, ys = jax.lax.scan(epoch, carry0,
+                                         (batch_idx, batch_w))
+                if guard:
+                    params, opt_state, err, lr, prev_loss, nsk = carry
+                    losses, skipped, vls, lrs = ys
+                else:
+                    params, opt_state, err, lr, prev_loss = carry
+                    (losses, vls, lrs), skipped, nsk = ys, None, None
+                return (params, opt_state, err, losses, skipped, nsk, vls,
+                        lrs, lr, prev_loss)
 
             self._run_chunk = jax.jit(run_chunk, donate_argnums=(0, 1, 2))
 
@@ -658,11 +757,19 @@ class EpochEngine:
         return idx, w
 
     # ------------------------------------------------------------------
+    def _plan_seed(self) -> int:
+        """Plan seed including the watchdog's re-key salt: 0 rollbacks
+        leave it exactly ``cfg.seed`` (bit-identical schedules); each
+        rollback shifts every subsequent epoch's batch order so a replay
+        doesn't march through the same poisoned sequence."""
+        return self.cfg.seed + 1_000_003 * self.plan_salt
+
     def full_plan(self, epoch: int) -> Tuple[jax.Array, jax.Array]:
         """(seed, epoch)-keyed full-data plan; unit weights are 1.  Shape
         ``(steps_per_epoch_max, batch_units)`` — identical to padded
         subset plans, so full and subset epochs share one executable."""
-        idx = epoch_plan(self.n_units, self.cfg.seed, epoch, self.batch_units)
+        idx = epoch_plan(self.n_units, self._plan_seed(), epoch,
+                         self.batch_units)
         return self._put_plan(idx, np.ones(idx.shape, np.float32))
 
     def bucket_steps(self, n_live_steps: int) -> int:
@@ -693,7 +800,8 @@ class EpochEngine:
             n_live = int((np.asarray(indices) >= 0).sum())
             pad_to_steps = self.bucket_steps(n_live // self.batch_units)
         idx, w = subset_epoch_plan(np.asarray(indices), np.asarray(weights),
-                                   self.cfg.seed, epoch, self.batch_units,
+                                   self._plan_seed(), epoch,
+                                   self.batch_units,
                                    pad_to_steps=pad_to_steps or None)
         return self._put_plan(idx, w)
 
@@ -717,12 +825,15 @@ class EpochEngine:
         donated and replaced alongside them."""
         batch_idx, batch_w = plan
         if self._pod is None:
-            return self._run(params, opt_state, batch_idx, batch_w,
-                             jnp.asarray(lr, jnp.float32))
-        err = self._ensure_compress_state(params)
-        params, opt_state, self.compress_state, losses = self._run(
-            params, opt_state, err, batch_idx, batch_w,
-            jnp.asarray(lr, jnp.float32))
+            params, opt_state, losses, skipped, nsk = self._run(
+                params, opt_state, batch_idx, batch_w,
+                jnp.asarray(lr, jnp.float32))
+        else:
+            err = self._ensure_compress_state(params)
+            (params, opt_state, self.compress_state, losses, skipped,
+             nsk) = self._run(params, opt_state, err, batch_idx, batch_w,
+                              jnp.asarray(lr, jnp.float32))
+        self.last_skipped, self.last_n_skipped = skipped, nsk
         return params, opt_state, losses
 
     def run_epochs(self, params, opt_state, lr, prev_loss,
@@ -749,16 +860,19 @@ class EpochEngine:
         batch_idx = jnp.stack([p[0] for p in plans])
         batch_w = jnp.stack([p[1] for p in plans])
         if self._pod is None:
-            return self._run_chunk(params, opt_state, self.val_units,
-                                   batch_idx, batch_w,
-                                   jnp.asarray(lr, jnp.float32),
-                                   jnp.asarray(prev_loss, jnp.float32))
-        err = self._ensure_compress_state(params)
-        (params, opt_state, self.compress_state, losses, vls, lrs, lr_out,
-         prev_out) = self._run_chunk(params, opt_state, err, self.val_units,
-                                     batch_idx, batch_w,
-                                     jnp.asarray(lr, jnp.float32),
-                                     jnp.asarray(prev_loss, jnp.float32))
+            (params, opt_state, losses, skipped, nsk, vls, lrs, lr_out,
+             prev_out) = self._run_chunk(params, opt_state, self.val_units,
+                                         batch_idx, batch_w,
+                                         jnp.asarray(lr, jnp.float32),
+                                         jnp.asarray(prev_loss, jnp.float32))
+        else:
+            err = self._ensure_compress_state(params)
+            (params, opt_state, self.compress_state, losses, skipped, nsk,
+             vls, lrs, lr_out, prev_out) = self._run_chunk(
+                params, opt_state, err, self.val_units, batch_idx, batch_w,
+                jnp.asarray(lr, jnp.float32),
+                jnp.asarray(prev_loss, jnp.float32))
+        self.last_skipped, self.last_n_skipped = skipped, nsk
         return params, opt_state, losses, vls, lrs, lr_out, prev_out
 
     def validate(self, params) -> float:
@@ -809,20 +923,28 @@ class HostEngine:
         self.n_units = int(self.units_host[next(iter(units))].shape[0])
         self.unit_size = int(self.units_host[next(iter(units))].shape[1])
         self.steps_per_epoch_max = self.n_units // self.batch_units
+        self.guard = bool(getattr(cfg, "nonfinite_guard", False))
+        self.plan_salt = 0
+        self.last_skipped = None
+        self.last_n_skipped = None
         self._step = jax.jit(make_step_core(bundle, cfg))
         self._eval = jax.jit(
             lambda params, batch: bundle.per_example_loss(params,
                                                           batch).mean())
 
     # -- unified interface ---------------------------------------------
+    def _plan_seed(self) -> int:
+        return self.cfg.seed + 1_000_003 * self.plan_salt
+
     def full_plan(self, epoch: int):
-        idx = epoch_plan(self.n_units, self.cfg.seed, epoch, self.batch_units)
+        idx = epoch_plan(self.n_units, self._plan_seed(), epoch,
+                         self.batch_units)
         return idx, np.ones(idx.shape, np.float32)
 
     def subset_plan(self, indices, weights, epoch: int):
         """Unpadded — the host loop executes exactly the live steps."""
         return subset_epoch_plan(np.asarray(indices), np.asarray(weights),
-                                 self.cfg.seed, epoch, self.batch_units)
+                                 self._plan_seed(), epoch, self.batch_units)
 
     plan_live_steps = staticmethod(plan_live_steps)
 
@@ -847,6 +969,7 @@ class HostEngine:
         in numpy (the same view `full_iterator`/`subset_iterator` yield)
         and dispatches one jit call per step."""
         losses = []
+        skipped = []
         for sel, w in zip(*plan):
             batch = {k: v[sel].reshape((-1,) + v.shape[2:])
                      for k, v in self.units_host.items()}
@@ -857,6 +980,11 @@ class HostEngine:
             params, opt_state, metrics = self._step(params, opt_state,
                                                     batch, lr)
             losses.append(float(metrics["loss"]))
+            if self.guard:
+                skipped.append(float(metrics["skipped"]))
+        if self.guard:
+            self.last_skipped = np.asarray(skipped, np.float32)
+            self.last_n_skipped = int(sum(skipped))
         return params, opt_state, np.asarray(losses, np.float64)
 
     def validate(self, params) -> float:

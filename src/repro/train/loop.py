@@ -51,6 +51,7 @@ from repro.core.pgm import ResidentSelector, Selection, pgm_select
 from repro.data.pipeline import unit_durations
 from repro.data.plan_prefetch import PlanPrefetcher
 from repro.train import checkpoint as ckpt_mod
+from repro.train import faults as faults_mod
 from repro.train.engine import EpochEngine, make_engine, make_step_core
 from repro.train.optim import NewbobState, make_update_for
 
@@ -64,6 +65,17 @@ class History:
     cost_units: float = 0.0        # full-epoch-equivalent compute units
     wall_time: float = 0.0
     final_params: Any = None
+    skipped_steps: int = 0         # non-finite steps gated off on device
+    rollbacks: int = 0             # divergence-watchdog restores
+    preempted: bool = False        # exited early on SIGTERM/SIGINT
+
+
+def _max_consecutive(mask: np.ndarray) -> int:
+    best = cur = 0
+    for v in mask:
+        cur = cur + 1 if v else 0
+        best = max(best, cur)
+    return best
 
 
 def make_train_step(bundle, cfg: TrainConfig):
@@ -126,6 +138,7 @@ def train_with_selection(
     spec_mode: str = "tp",          # SpecBuilder param-sharding policy
     epoch_chunk: int = 1,           # epochs folded into one scan dispatch
     plan_prefetch: bool = True,     # build next plans on a host thread
+    fault_plan: Optional["faults_mod.FaultPlan"] = None,  # chaos harness
     log_fn: Callable[[str], None] = lambda s: None,
 ) -> History:
     eng = make_engine(engine, bundle, tc, units, val_units=val_units,
@@ -168,37 +181,46 @@ def train_with_selection(
     # for the stateless none/bf16 modes), so a resume under a different
     # mode is flagged and a same-mode resume stays silent
     pod_mode = getattr(eng, "pod_axis", None) is not None
-    if resume and ckpt_dir and ckpt_mod.latest_step(ckpt_dir) is not None:
-        # peek at the manifest first: a checkpoint written without
-        # error-feedback state (different compress_mode) must restore
-        # gracefully with fresh zero residuals, not KeyError on a
-        # template leaf the archive never had
-        peek = ckpt_mod.read_manifest(ckpt_dir)
-        saved_cm = peek.get("compress_mode")
+    guard_on = bool(getattr(tc, "nonfinite_guard", False))
+
+    def _ckpt_template_fn(manifest):
+        # a checkpoint written without error-feedback state (different
+        # compress_mode) must restore gracefully with fresh zero
+        # residuals, not KeyError on a template leaf the archive never
+        # had; shapes/dtypes only — restore replaces every leaf from the
+        # archive, so don't allocate a device-resident zero tree
+        tmpl = {"params": params, "opt": opt_state}
+        if uses_err and any("'err'" in k for k in manifest["arrays"]):
+            tmpl["err"] = jax.eval_shape(eng.init_compress_state, params)
+        return tmpl
+
+    def _restore_newest():
+        """State from the newest checkpoint that passes checksum
+        verification — a corrupt latest falls back to the previous
+        intact step (DESIGN.md §10).  Returns
+        ``(params, opt_state, newbob, selection, next_epoch)``."""
+        loaded, manifest = ckpt_mod.restore_latest_intact(
+            ckpt_dir, template_fn=_ckpt_template_fn,
+            sharding_fn=eng.restore_sharding, log_fn=log_fn)
+        p, o = loaded["params"], loaded["opt"]
+        if uses_err:
+            if "err" in loaded:
+                eng.compress_state = loaded["err"]
+            else:
+                eng.compress_state = None
+                log_fn("warning: no error-feedback state in checkpoint; "
+                       "top-k residuals restart from zero")
+        saved_cm = manifest.get("compress_mode")
         if (saved_cm or "none") != tc.compress_mode:
             log_fn(f"warning: checkpoint was written with compress_mode="
                    f"{saved_cm or 'none'!r}, resuming with "
                    f"{tc.compress_mode!r}")
-        has_err = any("'err'" in k for k in peek["arrays"])
-        tmpl = {"params": params, "opt": opt_state}
-        if uses_err and has_err:
-            # shapes/dtypes only — restore replaces every leaf from the
-            # archive, so don't allocate a device-resident zero tree
-            tmpl["err"] = jax.eval_shape(eng.init_compress_state, params)
-        loaded, manifest = ckpt_mod.restore(
-            ckpt_dir, template=tmpl, sharding_fn=eng.restore_sharding)
-        params, opt_state = loaded["params"], loaded["opt"]
-        if uses_err and has_err:
-            eng.compress_state = loaded["err"]
-        elif uses_err:
-            log_fn("warning: no error-feedback state in checkpoint; "
-                   "top-k residuals restart from zero")
-        start_epoch = manifest["extra"]["epoch"] + 1
-        newbob = NewbobState(manifest["extra"]["lr"],
-                             manifest["extra"]["prev_loss"])
+        nb = NewbobState(manifest["extra"]["lr"],
+                         manifest["extra"]["prev_loss"])
+        sel = None
         if manifest["extra"].get("sel_indices") is not None:
             sel_idx = manifest["extra"]["sel_indices"]
-            selection = Selection(
+            sel = Selection(
                 jnp.asarray(sel_idx, jnp.int32),
                 jnp.asarray(manifest["extra"]["sel_weights"], jnp.float32),
                 jnp.asarray(sum(1 for i in sel_idx if i >= 0)),
@@ -207,6 +229,10 @@ def train_with_selection(
         if saved_mesh != mesh_shape:
             log_fn(f"resharded checkpoint (saved mesh {saved_mesh} -> "
                    f"current {mesh_shape})")
+        return p, o, nb, sel, manifest["extra"]["epoch"] + 1
+
+    if resume and ckpt_dir and ckpt_mod.latest_step(ckpt_dir) is not None:
+        params, opt_state, newbob, selection, start_epoch = _restore_newest()
         log_fn(f"resumed at epoch {start_epoch}")
 
     warm = tc.pgm.warm_start_epochs
@@ -214,6 +240,8 @@ def train_with_selection(
     prefetcher = (PlanPrefetcher(max_pending=max(2, epoch_chunk))
                   if plan_prefetch and is_scan else None)
     sel_round = 0          # prefetch key component: one per selection
+    writer = ckpt_mod.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    preempt = faults_mod.PreemptionHandler(log_fn=log_fn).install()
 
     def _use_full(e: int) -> bool:
         return method == "full" or e < warm
@@ -223,12 +251,24 @@ def train_with_selection(
 
     def _plan_builder(e: int, sel: Optional[Selection]):
         if _use_full(e):
-            return lambda: eng.full_plan(e)
-        idx, w = sel.indices, sel.weights
-        return lambda: eng.subset_plan(idx, w, e)
+            base = lambda: eng.full_plan(e)
+        else:
+            idx, w = sel.indices, sel.weights
+            base = lambda: eng.subset_plan(idx, w, e)
+        if fault_plan is None:
+            return base
+
+        def build():
+            fault_plan.maybe_fail_prefetch(e)
+            return fault_plan.poison_plan(e, base())
+        return build
 
     def _plan_key(e: int, rnd: int):
-        return ("full", e) if _use_full(e) else ("subset", rnd, e)
+        # the watchdog re-keys plans by bumping the engine's plan_salt;
+        # keys must carry it so stale pending plans never resolve
+        salt = getattr(eng, "plan_salt", 0)
+        return (("full", salt, e) if _use_full(e)
+                else ("subset", salt, rnd, e))
 
     def _get_plan(e: int):
         build = _plan_builder(e, selection)
@@ -314,6 +354,7 @@ def train_with_selection(
                 losses = np.asarray(step_losses, np.float64)[live]
                 train_losses = [float(losses.mean()) if losses.size
                                 else float("nan")]
+                has_live = [losses.size > 0]
                 if val_dev is not None:
                     vl = eng.validate(params)
                     newbob = newbob.update(vl, tc.anneal_factor,
@@ -329,14 +370,75 @@ def train_with_selection(
                                             newbob.prev_loss, plans)
                 step_losses = np.asarray(step_losses, np.float64)
                 train_losses = []
+                has_live = []
                 for i, p in enumerate(plans):
                     live = eng.plan_live_steps(p)
                     l = step_losses[i][live]
                     train_losses.append(float(l.mean()) if l.size
                                         else float("nan"))
+                    has_live.append(l.size > 0)
                 val_losses = [float(v) for v in np.asarray(vls)]
                 lrs = [float(v) for v in np.asarray(lrs_dev)]
                 newbob = NewbobState(float(lr_out), float(prev_out))
+
+            # --- divergence watchdog (DESIGN.md §10) ---
+            if guard_on:
+                skm = (np.asarray(eng.last_skipped).reshape(-1) > 0.5
+                       if eng.last_skipped is not None
+                       else np.zeros(0, bool))
+                n_sk = int(skm.sum())
+                hist.skipped_steps += n_sk
+                if n_sk:
+                    log_fn(f"guard: skipped {n_sk} non-finite step(s) in "
+                           f"epochs {chunk_epochs[0]}..{chunk_epochs[-1]}")
+                bad_train = any(not np.isfinite(tl) for tl, h
+                                in zip(train_losses, has_live) if h)
+                bad_val = (val_dev is not None
+                           and any(not np.isfinite(v) for v in val_losses))
+                K = int(getattr(tc, "max_skipped_steps", 0) or 0)
+                consec = _max_consecutive(skm)
+                if (K > 0 and consec >= K) or bad_train or bad_val:
+                    hist.rollbacks += 1
+                    if hist.rollbacks > 3:
+                        raise RuntimeError(
+                            "divergence watchdog: giving up after 3 "
+                            "rollbacks")
+                    reason = (f"{consec} consecutive skipped steps"
+                              if K > 0 and consec >= K
+                              else "non-finite loss")
+                    log_fn(f"watchdog: {reason} in epochs "
+                           f"{chunk_epochs[0]}..{chunk_epochs[-1]}; "
+                           f"rolling back with a re-keyed batch plan")
+                    if writer is not None:
+                        try:
+                            writer.wait()
+                        except BaseException as e:
+                            log_fn(f"warning: async checkpoint write "
+                                   f"failed: {e}")
+                    eng.plan_salt = getattr(eng, "plan_salt", 0) + 1
+                    sel_round += 1
+                    if prefetcher is not None:
+                        prefetcher.invalidate()
+                    if (ckpt_dir
+                            and ckpt_mod.latest_step(ckpt_dir) is not None):
+                        (params, opt_state, newbob, selection,
+                         epoch) = _restore_newest()
+                        log_fn(f"watchdog: rolled back to epoch {epoch}")
+                    else:
+                        key = jax.random.fold_in(key,
+                                                 7919 + hist.rollbacks)
+                        params = bundle.init_params(key)
+                        opt_state = opt_init(params)
+                        params, opt_state = eng.shard_state(params,
+                                                            opt_state)
+                        if uses_err:
+                            eng.compress_state = None
+                        newbob = NewbobState(tc.lr)
+                        selection = None
+                        epoch = 0
+                        log_fn("watchdog: no checkpoint; restarting from "
+                               "re-initialised state")
+                    continue
 
             for e, tl, vl, lr in zip(chunk_epochs, train_losses,
                                      val_losses, lrs):
@@ -346,6 +448,9 @@ def train_with_selection(
                 log_fn(f"epoch {e}: train {tl:.4f} val {vl:.4f} "
                        f"lr {lr:.4f}")
 
+            if fault_plan is not None:
+                fault_plan.maybe_preempt(chunk_epochs[-1])
+            preempted = preempt.triggered
             if ckpt_dir:
                 extra = {"epoch": chunk_epochs[-1], "lr": newbob.lr,
                          "prev_loss": newbob.prev_loss,
@@ -355,19 +460,36 @@ def train_with_selection(
                          "sel_weights": (np.asarray(
                              selection.weights).tolist()
                              if selection is not None else None)}
+                if preempted:
+                    extra["preempted"] = True
                 tree = {"params": params, "opt": opt_state}
                 if uses_err:
                     tree["err"] = (eng.compress_state
                                    if eng.compress_state is not None
                                    else eng.init_compress_state(params))
-                ckpt_mod.save(ckpt_dir, chunk_epochs[-1], tree, extra,
+                writer.submit(chunk_epochs[-1], tree, extra,
                               mesh_shape=mesh_shape,
                               compress_mode=(tc.compress_mode if pod_mode
                                              else None))
+            if preempted:
+                if writer is not None:
+                    writer.wait()
+                hist.preempted = True
+                log_fn(f"preemption: emergency checkpoint at epoch "
+                       f"{chunk_epochs[-1]}; exiting resumably")
+                break
             epoch += chunk
+        if writer is not None:
+            writer.wait()    # surface deferred write errors before returning
     finally:
+        preempt.uninstall()
         if prefetcher is not None:
             prefetcher.close()
+        if writer is not None:
+            try:
+                writer.close()
+            except BaseException as e:
+                log_fn(f"warning: checkpoint writer failed on close: {e}")
 
     hist.wall_time = time.time() - t0
     hist.final_params = params

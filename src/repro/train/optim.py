@@ -18,6 +18,24 @@ def global_norm(tree) -> jax.Array:
                         for l in jax.tree.leaves(tree)))
 
 
+def tree_all_finite(tree) -> jax.Array:
+    """Traced bool scalar: every leaf of ``tree`` is free of NaN/Inf.
+
+    Reference checker for the non-finite step guard's semantics
+    (DESIGN.md §10).  The jitted step itself doesn't pay for this
+    leafwise sweep: gradient clipping already computes the global norm,
+    and any NaN/Inf leaf poisons that sum of squares, so the in-scan
+    guard checks ``isfinite(gnorm)`` — one scalar — and feeds it into
+    the same ``gate_step`` select that implements weight-0 padding
+    batches (a poisoned step advances nothing, bit-exactly, with no
+    host sync)."""
+    leaves = jax.tree.leaves(tree)
+    ok = jnp.bool_(True)
+    for l in leaves:
+        ok = ok & jnp.all(jnp.isfinite(l))
+    return ok
+
+
 def clip_by_global_norm(grads, max_norm: float):
     n = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))

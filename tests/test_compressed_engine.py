@@ -154,6 +154,42 @@ def test_recurrent_padding_on_pod_mesh_bitwise():
         assert _bitwise_equal(b, a)
 
 
+def test_guard_composes_with_pod_compression_bitwise():
+    """The non-finite guard under pod-mode top-k compression
+    (DESIGN.md §10): guard-on over finite data is bit-identical to
+    guard-off — params, opt state AND error-feedback residuals — and a
+    fully poisoned plan rolls all three back bit-exactly (the residuals
+    gate through the same ``gate_step`` select as the padding rows)."""
+    outs = {}
+    for guard in (False, True):
+        m, units, _, tc = _lm_setup(compress_mode="topk")
+        tc = dataclasses.replace(tc, nonfinite_guard=guard)
+        mesh = jax.make_mesh((1, 1), ("data", "pod"))
+        eng = EpochEngine(m, tc, units, batch_units=2, mesh=mesh)
+        opt_init, _ = make_update_for(tc)
+        p = m.init_params(jax.random.PRNGKey(0))
+        o = opt_init(p)
+        p, o = eng.shard_state(p, o)
+        p, o, _ = eng.run_epoch(p, o, tc.lr, eng.full_plan(0))
+        outs[guard] = (p, o, eng.compress_state, eng)
+    for a, b in zip(outs[False][:3], outs[True][:3]):
+        assert _bitwise_equal(a, b)
+    # a poisoned epoch on the guarded engine: every step gated off,
+    # residuals included — and no retrace
+    p, o, err, eng = outs[True]
+    assert eng.n_epoch_traces == 1
+    before = (jax.tree.map(np.asarray, p), jax.tree.map(np.asarray, o),
+              jax.tree.map(np.asarray, err))
+    idx, w = eng.full_plan(1)
+    w = jnp.full_like(w, jnp.nan)
+    p, o, losses = eng.run_epoch(p, o, 0.5, (idx, w))
+    assert eng.n_epoch_traces == 1
+    assert int(eng.last_n_skipped) == int(idx.shape[0])
+    assert np.asarray(losses).tolist() == [0.0] * int(idx.shape[0])
+    for b, a in zip(before, (p, o, eng.compress_state)):
+        assert _bitwise_equal(b, a)
+
+
 def test_compress_config_validation():
     m, units, _, tc = _lm_setup(compress_mode="bf16")
     # compression without a pod axis on the mesh is a config error …

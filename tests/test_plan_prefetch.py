@@ -60,6 +60,51 @@ def test_del_releases_worker():
     assert not _worker_threads()
 
 
+def _flaky(fail_times, value):
+    """Builder failing ``fail_times`` times before succeeding."""
+    calls = {"n": 0}
+
+    def build():
+        calls["n"] += 1
+        if calls["n"] <= fail_times:
+            raise RuntimeError(f"transient #{calls['n']}")
+        return value
+    return build, calls
+
+
+def test_transient_failure_retried_on_worker_path():
+    """A builder that fails then recovers is retried in place on the
+    worker thread — the consumer sees only the successful result."""
+    with PlanPrefetcher(retries=2, backoff_s=0.001) as pf:
+        build, calls = _flaky(2, "plan")
+        pf.schedule("k", build)
+        assert pf.get("k", lambda: None) == "plan"
+        assert calls["n"] == 3
+        assert pf.retried == 2
+
+
+def test_transient_failure_retried_on_miss_path():
+    """The synchronous ``get()`` fallback degrades identically: same
+    retry policy as the worker path."""
+    with PlanPrefetcher(retries=2, backoff_s=0.001) as pf:
+        build, calls = _flaky(1, 42)
+        assert pf.get("unscheduled", build) == 42
+        assert calls["n"] == 2
+        assert (pf.retried, pf.misses) == (1, 1)
+
+
+def test_permanent_failure_still_raises_after_retries():
+    """Retries are capped: a deterministic failure propagates to the
+    consumer once the budget is exhausted (no infinite retry loop)."""
+    with PlanPrefetcher(retries=2, backoff_s=0.001) as pf:
+        build, calls = _flaky(99, None)
+        pf.schedule("k", build)
+        with pytest.raises(RuntimeError, match="transient #3"):
+            pf.get("k", lambda: None)
+        assert calls["n"] == 3           # retries + 1 attempts, then give up
+        assert pf.retried == 2
+
+
 def test_max_pending_bounds_buffer():
     ev = threading.Event()
     with PlanPrefetcher(max_pending=2) as pf:

@@ -3,6 +3,8 @@ regressions (first-token eos, live-token accounting, k-step termination
 sync), sampling/determinism contracts, continuous-batching slot-reuse
 parity against one-shot `generate`, and RNN-T streaming greedy decode
 against the non-streaming reference on the CRDNN smoke."""
+import time
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -173,6 +175,135 @@ def test_slot_engine_respects_budget_and_bounds(lm):
                        max_new_tokens=4)
     with pytest.raises(ValueError, match="exceeds"):
         eng.run([too_long])
+
+
+# ---------------------------------------------------------------------------
+# bounded queue + deadlines (DESIGN.md §10 graceful degradation)
+# ---------------------------------------------------------------------------
+
+class _StepClock:
+    """Deterministic clock: every read advances time by ``dt`` — the
+    engine's own call pattern becomes the (repeatable) passage of time,
+    so deadline tests need no sleeps and no wall-clock."""
+
+    def __init__(self, dt=1.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+def _req(cfg, uid, *, rng, max_new=6, arrival=0.0, deadline=None, L=6):
+    return Request(uid=uid,
+                   inputs={"tokens": rng.integers(
+                       0, cfg.vocab_size, (L,)).astype(np.int32)},
+                   max_new_tokens=max_new, arrival_s=arrival,
+                   deadline_s=deadline)
+
+
+def test_bounded_queue_rejects_overflow_with_backpressure(lm):
+    """With ``max_queue`` set, arrivals beyond the bound are rejected
+    immediately (empty completion, ``status="rejected"``) instead of
+    growing host memory; everything admitted still completes."""
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(3)
+    reqs = [_req(cfg, i, rng=rng, max_new=4) for i in range(6)]
+    eng = SlotEngine(bundle, params, n_slots=1, max_new_tokens=4,
+                     max_prompt_len=16, eos_id=None, max_queue=2)
+    comps = {c.uid: c for c in eng.run(reqs)}
+    assert len(comps) == len(reqs)
+    rejected = [c for c in comps.values() if c.status == "rejected"]
+    served = [c for c in comps.values() if c.status == "ok"]
+    # all six arrive in one sweep before any admission: the queue keeps
+    # the first 2, the other 4 are rejected on arrival
+    assert eng.n_rejected == len(rejected) == 4
+    assert sorted(c.uid for c in served) == [0, 1]
+    for c in rejected:
+        assert c.tokens == [] and np.isnan(c.admit_s)
+    for c in served:
+        assert len(c.tokens) == 4 and np.isfinite(c.admit_s)
+
+
+def test_unbounded_queue_is_legacy_default(lm):
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(4)
+    reqs = [_req(cfg, i, rng=rng, max_new=2) for i in range(5)]
+    eng = SlotEngine(bundle, params, n_slots=1, max_new_tokens=2,
+                     max_prompt_len=16, eos_id=None)
+    comps = eng.run(reqs)
+    assert eng.n_rejected == 0
+    assert all(c.status == "ok" for c in comps)
+
+
+def test_queued_deadline_expires_without_taking_a_slot(lm):
+    """A request whose deadline passes while it waits in the queue is
+    dropped with ``status="expired"`` and zero tokens — it never holds a
+    decode slot — while patient requests behind it still complete."""
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(5)
+    clock = _StepClock(dt=1.0)
+    # uid 0 occupies the only slot for many scans; uid 1's deadline is
+    # far shorter than uid 0's decode; uid 2 waits without a deadline
+    reqs = [_req(cfg, 0, rng=rng, max_new=32),
+            _req(cfg, 1, rng=rng, max_new=4, deadline=3.0),
+            _req(cfg, 2, rng=rng, max_new=4)]
+    eng = SlotEngine(bundle, params, n_slots=1, max_new_tokens=32,
+                     max_prompt_len=16, eos_id=None, clock=clock)
+    comps = {c.uid: c for c in eng.run(reqs)}
+    assert comps[1].status == "expired" and comps[1].tokens == []
+    assert np.isnan(comps[1].admit_s)
+    assert comps[0].status == "ok" and len(comps[0].tokens) == 32
+    assert comps[2].status == "ok" and len(comps[2].tokens) == 4
+    assert eng.n_expired == 1
+
+
+def test_mid_decode_deadline_evicts_dead_slot_and_frees_it(lm):
+    """A request that expires mid-decode is killed on device (live mask
+    cleared — a dead-slot no-op, no retrace), read out with its partial
+    tokens, and its slot is immediately reusable."""
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(6)
+    clock = _StepClock(dt=1.0)
+    # sync_every=1: one token per scan, several clock ticks per scan ->
+    # uid 0's deadline hits after at least one emission, well before its
+    # 64-token budget; uid 1 then reuses the freed slot
+    reqs = [_req(cfg, 0, rng=rng, max_new=64, deadline=40.0),
+            _req(cfg, 1, rng=rng, max_new=3)]
+    eng = SlotEngine(bundle, params, n_slots=1, max_new_tokens=64,
+                     max_prompt_len=16, eos_id=None, sync_every=1,
+                     clock=clock)
+    comps = {c.uid: c for c in eng.run(reqs)}
+    assert comps[0].status == "expired"
+    assert 0 < len(comps[0].tokens) < 64        # partial output survives
+    assert np.isfinite(comps[0].admit_s)        # it DID hold a slot
+    assert eng.n_expired == 1
+    assert comps[1].status == "ok" and len(comps[1].tokens) == 3
+    assert eng.n_admits == 2                    # slot was reused
+
+
+def test_deadline_output_prefix_matches_unexpired_run(lm):
+    """Expiry must not corrupt decoding: the partial tokens of an
+    expired request are a prefix of what the same prompt produces
+    without a deadline."""
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+
+    def run_one(deadline, clock):
+        eng = SlotEngine(bundle, params, n_slots=1, max_new_tokens=32,
+                         max_prompt_len=16, eos_id=None, sync_every=1,
+                         clock=clock)
+        (c,) = eng.run([Request(uid=0, inputs={"tokens": prompt},
+                                max_new_tokens=32, deadline_s=deadline)])
+        return c
+
+    full = run_one(None, time.time)
+    cut = run_one(30.0, _StepClock(dt=1.0))
+    assert cut.status == "expired" and full.status == "ok"
+    assert 0 < len(cut.tokens) < len(full.tokens)
+    assert full.tokens[: len(cut.tokens)] == cut.tokens
 
 
 # ---------------------------------------------------------------------------

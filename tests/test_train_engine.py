@@ -255,6 +255,82 @@ def test_recurrent_resume_bit_exact(arch, tmp_path):
     assert h_res.val_loss == h_full.val_loss[2:]
 
 
+def test_guard_composes_with_padding_gate_bitwise():
+    """The non-finite guard folds into the same ``step_on`` gate as the
+    weight-0 padding rows (DESIGN.md §10): on a plan mixing real and
+    padding rows, guard-on must be bit-identical to guard-off, padding
+    rows must not count as skipped, and a poisoned real row must gate
+    off exactly like a padding row."""
+    import dataclasses
+    m, units, _, tc = _lm_setup(n=16, epochs=1)
+    from repro.train.optim import make_update_for
+    opt_init, _ = make_update_for(tc)
+    # subset plan with trailing padding (2 real units into 2-unit batches,
+    # padded to 2 steps by construction below)
+    idx = np.asarray([[0, 1], [-1, -1]], np.int32)
+    w = np.asarray([[1.0, 1.0], [0.0, 0.0]], np.float32)
+    outs = {}
+    for guard in (False, True):
+        eng = EpochEngine(m, dataclasses.replace(tc, nonfinite_guard=guard),
+                          units, batch_units=2)
+        p = m.init_params(jax.random.PRNGKey(0))
+        o = opt_init(p)
+        outs[guard] = eng.run_epoch(p, o, tc.lr,
+                                    (jnp.asarray(idx), jnp.asarray(w)))
+        if guard:
+            # padding is gated, not "skipped": the guard metric only
+            # reports suppressed *live* steps
+            assert int(eng.last_n_skipped) == 0
+            assert np.asarray(eng.last_skipped).tolist() == [0.0, 0.0]
+    for a, b in zip(outs[False], outs[True]):
+        assert all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    # poisoned real row == padding row, bit for bit (carry incl. opt step)
+    eng = EpochEngine(m, dataclasses.replace(tc, nonfinite_guard=True),
+                      units, batch_units=2)
+    w_nan = np.asarray([[np.nan, np.nan], [0.0, 0.0]], np.float32)
+    p = m.init_params(jax.random.PRNGKey(0))
+    p2, o2, losses = eng.run_epoch(p, opt_init(p), tc.lr,
+                                   (jnp.asarray(idx), jnp.asarray(w_nan)))
+    assert int(eng.last_n_skipped) == 1
+    assert np.asarray(losses).tolist() == [0.0, 0.0]
+    pad_only = (jnp.full((2, 2), -1, jnp.int32),
+                jnp.zeros((2, 2), jnp.float32))
+    p3 = m.init_params(jax.random.PRNGKey(0))
+    p4, o4, _ = eng.run_epoch(p3, opt_init(p3), tc.lr, pad_only)
+    for a, b in zip((p2, o2), (p4, o4)):
+        assert all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_emergency_checkpoint_resume_bit_exact_mid_chunk(tmp_path):
+    """A preemption landing mid-run on a chunked dispatch checkpoints at
+    the chunk boundary and resumes bit-exactly onto the uninterrupted
+    trajectory — the guard's skip counters and the chunked newbob state
+    all travel through the manifest."""
+    import dataclasses
+    from repro.train import faults
+    m, units, val, tc = _lm_setup(epochs=4)
+    tc = dataclasses.replace(tc, nonfinite_guard=True)
+    d = str(tmp_path / "ck")
+    h_full = train_with_selection(m, units, tc, method="pgm",
+                                  val_units=val, engine="scan",
+                                  epoch_chunk=2)
+    # warm start is 1 epoch, so the chunks are [0], [1,2], [3]: a SIGTERM
+    # requested after epoch 1 lands mid-chunk — epoch 2 still runs (the
+    # in-flight dispatch completes) and the checkpoint is cut at epoch 2
+    h_cut = train_with_selection(
+        m, units, tc, method="pgm", val_units=val, engine="scan",
+        epoch_chunk=2, ckpt_dir=d,
+        fault_plan=faults.FaultPlan(preempt_after_epoch=1))
+    assert h_cut.preempted and len(h_cut.val_loss) == 3
+    h_res = train_with_selection(m, units, tc, method="pgm",
+                                 val_units=val, engine="scan",
+                                 epoch_chunk=2, ckpt_dir=d, resume=True)
+    assert h_cut.val_loss + h_res.val_loss == h_full.val_loss
+    assert h_cut.train_loss + h_res.train_loss == h_full.train_loss
+
+
 def test_donation_does_not_retain_stale_buffers():
     """run_epoch donates (params, opt_state): the inputs' buffers are
     consumed (deleted when the backend supports donation) and the engine

@@ -4,13 +4,22 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all test-archs test-chaos bench bench-sharded \
-	bench-rnnt bench-compress bench-serve bench-archs bench-selection \
-	docs-check
+.PHONY: test-fast test-all test-archs test-chaos check-static bench \
+	bench-sharded bench-rnnt bench-compress bench-serve bench-archs \
+	bench-selection docs-check
 
-# fast tier: everything not marked slow (~3-4 min) — the development loop
-test-fast:
+# fast tier: static contracts + everything not marked slow (~3-4 min) —
+# the development loop
+test-fast: check-static
 	$(PY) -m pytest -q -m "not slow"
+
+# level-1 static contracts (repro.analysis): AST lints over the repo's
+# implicit invariants — host syncs, key reuse, dtype drift, collective
+# cast order, Pallas hygiene, bench/docs drift, noqa hygiene.  Exits
+# non-zero on any finding; `--json` for machine output, `--list` for
+# the rule catalog (DESIGN.md §11)
+check-static:
+	$(PY) -m repro.analysis --root .
 
 # tier-1 verify: the full suite, fail-fast (what the CI gate runs).
 # The forced host-device count makes the in-process mesh paths (and the

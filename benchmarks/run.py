@@ -26,6 +26,22 @@ def main() -> None:
     from benchmarks.bench_train_loop import bench_train_loop
 
     print("name,us_per_call,derived")
+
+    # static-contract gate duration: `make check-static` runs on every
+    # `make test-fast`, so its wall time is part of the dev loop and is
+    # tracked like any other cell
+    try:
+        from pathlib import Path
+
+        from repro.analysis import all_rules, run_lint
+        t0 = time.time()
+        findings = run_lint(Path(__file__).resolve().parent.parent)
+        dt = time.time() - t0
+        print(f"check_static/full_repo,{dt*1e6:.1f},"
+              f"findings={len(findings)};rules={len(all_rules())}")
+    except Exception as e:
+        print(f"check_static,0,ERROR={type(e).__name__}:{e}")
+
     for fn in ALL_TABLES:
         t0 = time.time()
         try:

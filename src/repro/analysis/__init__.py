@@ -1,0 +1,18 @@
+"""repro.analysis — static contracts for the engine invariants.
+
+Level 1 (``lint``): repo-specific AST lints, run by ``make
+check-static`` (``python -m repro.analysis``) and self-tested by
+``tests/test_analysis.py``.
+
+Level 2 (``contracts``): reusable checkers over the *compiled
+artifacts* of the real engine builds — retrace-freedom, carry donation,
+no host transfers, collective wire width — imported by the engine tests
+in place of ad-hoc HLO string greps.
+
+Catalog and policy: ``docs/DESIGN.md`` §11.
+"""
+from repro.analysis.lint import (Finding, JSON_SCHEMA_VERSION, Rule,
+                                 all_rules, run_lint, to_json)
+
+__all__ = ["Finding", "JSON_SCHEMA_VERSION", "Rule", "all_rules",
+           "run_lint", "to_json"]

@@ -1,0 +1,358 @@
+"""Level-2 static contracts: checkers over the compiled artifacts of the
+real engine builds.
+
+Four invariants carried the last nine PRs and were each asserted once,
+ad hoc, in whichever test introduced them.  This module promotes them to
+reusable checkers the engine tests import:
+
+  * ``track_compiles`` / ``assert_retrace_free`` — a shared
+    compile-counter context manager (replaces the bespoke
+    ``EpochEngine.n_epoch_traces`` python-side-effect counter).  Counts
+    *actual XLA compilations* via ``jax.log_compiles``, so it also sees
+    op-by-op compiles a hand-rolled per-function counter never could,
+    and it applies to executables that never had a counter (the
+    ``SlotEngine`` admit/decode path).
+  * ``assert_donated`` — the donated carry really aliases its outputs,
+    read off the ``tf.aliasing_output`` / ``jax.buffer_donor``
+    attributes of the lowered module's entry parameters.
+  * ``assert_no_host_transfers`` — the epoch/decode body contains no
+    infeed/outfeed, host callback custom-calls, or async host copies;
+    ``no_implicit_transfers`` is its runtime twin (a transfer guard
+    that fails the block on any implicit device-to-host fetch).
+  * ``assert_collective_width`` / ``assert_replica_groups`` — the PR-5
+    bf16-wire check generalized to any mesh: dtype is proven on the
+    *lowered* StableHLO (XLA:CPU float-normalization promotes compiled
+    reduces, DESIGN §5), group shape on the *compiled* HLO, with both
+    the literal ``{{0,2},{1,3}}`` and iota ``[2,2]<=[2,2]T(1,0)``
+    replica-group encodings parsed against the mesh's expected groups.
+
+All checkers accept either HLO text or a ``jax.stages.Lowered``.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+import re
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "CompileLog", "track_compiles", "assert_retrace_free",
+    "donated_flat_args", "assert_donated",
+    "assert_no_host_transfers", "no_implicit_transfers",
+    "lowered_reduce_dtypes", "assert_collective_width",
+    "parse_replica_groups", "expected_groups", "assert_replica_groups",
+]
+
+# ---------------------------------------------------------------------------
+# retrace freedom
+# ---------------------------------------------------------------------------
+
+_COMPILE_RE = re.compile(r"Finished XLA compilation of (.+?) in [\d.eE+-]+")
+
+
+class CompileLog:
+    """Names of every XLA compilation finished inside a
+    ``track_compiles`` block.  Cache hits do not log, so ``count == 0``
+    means the block dispatched only already-compiled executables."""
+
+    def __init__(self):
+        self.names: List[str] = []
+
+    @property
+    def count(self) -> int:
+        return len(self.names)
+
+    def __repr__(self):
+        return f"CompileLog(count={self.count}, names={self.names!r})"
+
+
+class _Capture(logging.Handler):
+    def __init__(self, log: CompileLog):
+        super().__init__(level=logging.DEBUG)
+        self._log = log
+
+    def emit(self, record):
+        m = _COMPILE_RE.search(record.getMessage())
+        if m:
+            self._log.names.append(m.group(1))
+
+
+@contextlib.contextmanager
+def track_compiles():
+    """``with track_compiles() as log: ...; assert log.count == 0``.
+
+    Implemented on ``jax.log_compiles()`` + a handler on the dispatch
+    logger — the only place every compilation (jit, pjit, op-by-op)
+    funnels through.  Nesting is fine; each context gets its own log.
+    """
+    import jax
+    log = CompileLog()
+    logger = logging.getLogger("jax._src.dispatch")
+    handler = _Capture(log)
+    old_level = logger.level
+    logger.addHandler(handler)
+    if old_level > logging.DEBUG or old_level == logging.NOTSET:
+        logger.setLevel(logging.DEBUG)
+    # log_compiles raises these loggers to WARNING-visible; keep the
+    # records out of stderr while we capture them
+    muted = [logging.getLogger(n) for n in
+             ("jax._src.dispatch", "jax._src.interpreters.pxla")]
+    old_prop = [lg.propagate for lg in muted]
+    for lg in muted:
+        lg.propagate = False
+    try:
+        with jax.log_compiles():
+            yield log
+    finally:
+        logger.removeHandler(handler)
+        logger.setLevel(old_level)
+        for lg, p in zip(muted, old_prop):
+            lg.propagate = p
+
+
+@contextlib.contextmanager
+def assert_retrace_free(what: str = "block", allowed: int = 0):
+    """Assert the wrapped block triggers no (or at most ``allowed``)
+    XLA compilations — i.e. everything it dispatches was already
+    compiled.  Use after a warm-up call that builds the executables."""
+    with track_compiles() as log:
+        yield log
+    if log.count > allowed:
+        raise AssertionError(
+            f"{what} retraced: {log.count} compilation(s) "
+            f"(allowed {allowed}): {log.names}")
+
+
+# ---------------------------------------------------------------------------
+# donation (input-output aliasing)
+# ---------------------------------------------------------------------------
+
+def _lowered_text(lowered_or_text) -> str:
+    if isinstance(lowered_or_text, str):
+        return lowered_or_text
+    return lowered_or_text.as_text()
+
+
+# plain jit marks aliasing directly; under a mesh the same donation
+# lowers to a buffer-donor hint instead (aliases resolve at compile)
+_DONOR_MARKERS = ("tf.aliasing_output", "jax.buffer_donor")
+_ARG_POS_RE = re.compile(r"%arg(\d+):")
+
+
+def donated_flat_args(lowered_or_text) -> List[bool]:
+    """Per flattened entry argument: is it donated?  Read from the
+    ``tf.aliasing_output`` / ``jax.buffer_donor`` attributes on
+    ``@main``'s parameters in the lowered StableHLO."""
+    text = _lowered_text(lowered_or_text)
+    m = re.search(r"func\.func (?:public )?@main\((.*?)\)\s*(?:->|\{)",
+                  text, flags=re.S)
+    if not m:
+        raise AssertionError("no @main entry function in lowered module")
+    sig = m.group(1)
+    hits = list(_ARG_POS_RE.finditer(sig))
+    flags = {}
+    for i, h in enumerate(hits):
+        end = hits[i + 1].start() if i + 1 < len(hits) else len(sig)
+        chunk = sig[h.start():end]
+        flags[int(h.group(1))] = any(mk in chunk for mk in _DONOR_MARKERS)
+    return [flags[i] for i in sorted(flags)]
+
+
+def assert_donated(lowered_or_text, carry_leaves, *, skip=None) -> None:
+    """Assert the ``len(leaves(carry_leaves))`` flattened entry
+    arguments starting after ``leaves(skip)`` are donated.
+
+    The epoch engines place the donated carry (params, opt state[,
+    error state]) first — ``skip=None``; ``SlotEngine`` donates the
+    slot-state pool that follows the (non-donated) params —
+    ``skip=params``."""
+    import jax
+    n0 = 0 if skip is None else len(jax.tree_util.tree_leaves(skip))
+    n = len(jax.tree_util.tree_leaves(carry_leaves))
+    flags = donated_flat_args(lowered_or_text)
+    if len(flags) < n0 + n:
+        raise AssertionError(
+            f"entry has {len(flags)} args but carry spans "
+            f"[{n0}, {n0 + n})")
+    missing = [i for i in range(n) if not flags[n0 + i]]
+    if missing:
+        raise AssertionError(
+            f"carry leaves {missing} are not donated "
+            f"(no aliasing/donor mark on the lowered entry) — "
+            f"buffers will be double-allocated")
+
+
+# ---------------------------------------------------------------------------
+# no host transfers
+# ---------------------------------------------------------------------------
+
+_HOST_TRANSFER_PATTERNS = (
+    # compiled HLO
+    r"\binfeed\(", r"\boutfeed\(", r"= \S+ send\(", r"= \S+ recv\(",
+    r"\bcopy-start\(", r"custom-call[^\n]*callback",
+    # lowered StableHLO
+    r"stablehlo\.infeed", r"stablehlo\.outfeed", r"stablehlo\.send",
+    r"stablehlo\.recv", r"custom_call[^\n]*callback",
+)
+
+
+def assert_no_host_transfers(*hlo_texts) -> None:
+    """Assert no host transfer primitives (infeed/outfeed, send/recv,
+    async host copies, python-callback custom-calls) appear in the given
+    modules.  Pass both the lowered and compiled text of the epoch /
+    decode body; callbacks show as ``custom_call`` pre-optimization and
+    ``custom-call ... callback`` post."""
+    for blob in hlo_texts:
+        text = _lowered_text(blob)
+        for pat in _HOST_TRANSFER_PATTERNS:
+            m = re.search(pat, text)
+            if m:
+                line = text[:m.start()].count("\n") + 1
+                raise AssertionError(
+                    f"host transfer `{m.group(0)}` at module line {line} "
+                    f"— the scanned body must stay device-resident")
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """Runtime complement to ``assert_no_host_transfers``: raise on any
+    *implicit* device-to-host transfer inside the block (a ``float()``
+    / ``np.asarray()`` on a device array).  Explicit fetches via
+    ``jax.device_get`` still pass — wrap only the dispatch-side code
+    whose syncs are supposed to happen elsewhere.
+
+    Only bites on real accelerators: on the CPU backend arrays already
+    live in host memory, so the runtime never routes a D2H copy through
+    the guard and the block passes vacuously (the static
+    ``assert_no_host_transfers`` / ``host-sync-loop`` checks carry the
+    invariant there)."""
+    import jax
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield
+
+
+# ---------------------------------------------------------------------------
+# collective width + replica groups
+# ---------------------------------------------------------------------------
+
+# vmap-bound axis: pmean becomes a real reduce over the leading pod
+# dim, e.g. `stablehlo.reduce(%x init: %c) applies stablehlo.add across
+# dimensions = [0] : (tensor<2x64xbf16>, tensor<bf16>) -> ...`
+_REDUCE_RE = re.compile(
+    r"stablehlo\.reduce\([^\n]*dimensions = \[([\d, ]*)\][^\n]*")
+_TENSOR_DTYPE_RE = re.compile(r"tensor<[0-9x]*([a-z][a-z0-9]+)>")
+# shard_map-bound axis: an explicit all_reduce; its region block names
+# the scalar operand type
+_ALL_REDUCE_RE = re.compile(
+    r"all_reduce[^\n]*?\n?.*?\^bb0\(%\w+: tensor<([a-z][a-z0-9]+)>",
+    flags=re.S)
+
+
+def lowered_reduce_dtypes(lowered_or_text,
+                          dims: Optional[Sequence[int]] = None) -> List[str]:
+    """Element dtypes of every cross-replica reduction in the lowered
+    module: ``stablehlo.reduce`` over ``dims`` (default ``[0]``, the
+    engines' stacked pod axis) plus every ``stablehlo.all_reduce``."""
+    text = _lowered_text(lowered_or_text)
+    want = list(dims) if dims is not None else [0]
+    out: List[str] = []
+    for m in _REDUCE_RE.finditer(text):
+        got = [int(d) for d in m.group(1).replace(" ", "").split(",") if d]
+        if got == want:
+            tm = _TENSOR_DTYPE_RE.search(m.group(0))
+            if tm:
+                out.append(tm.group(1))
+    out.extend(m.group(1) for m in _ALL_REDUCE_RE.finditer(text))
+    return out
+
+
+def assert_collective_width(lowered_or_text, *, dtype: str,
+                            n_expected: Optional[int] = None,
+                            dims: Optional[Sequence[int]] = None) -> None:
+    """Assert the *lowered* module's cross-replica reductions run at
+    ``dtype`` width — the wire-width claim.  Must be checked
+    pre-optimization: XLA:CPU float-normalization promotes bf16 reduces
+    to f32 in the compiled module (DESIGN §5).
+
+    With ``n_expected`` (one per gradient leaf for the engines), assert
+    exactly that many reductions at ``dtype`` — other-width reductions
+    (e.g. the engines' f32 metric pmeans) are tolerated.  Without it,
+    assert *every* reduction runs at ``dtype``."""
+    got = lowered_reduce_dtypes(lowered_or_text, dims=dims)
+    if not got:
+        raise AssertionError("no cross-replica reductions in lowered module")
+    if n_expected is not None:
+        n_at = sum(1 for d in got if d == dtype)
+        if n_at != n_expected:
+            raise AssertionError(
+                f"{n_at} reductions at {dtype!r}, expected {n_expected} "
+                f"(one per leaf); widths seen: {got}")
+    else:
+        wrong = [d for d in got if d != dtype]
+        if wrong:
+            raise AssertionError(
+                f"collective(s) reduce at {sorted(set(wrong))}, expected "
+                f"{dtype!r} — the wire moves the wrong number of bytes")
+
+
+_GROUPS_LITERAL_RE = re.compile(r"replica_groups=\{(\{[\d,{} ]*\})\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def parse_replica_groups(line: str) -> Optional[List[List[int]]]:
+    """Replica groups of one compiled ``all-reduce`` line, handling both
+    the literal ``{{0,2},{1,3}}`` and iota ``[2,2]<=[4]`` /
+    ``[2,2]<=[2,2]T(1,0)`` encodings."""
+    m = _GROUPS_LITERAL_RE.search(line)
+    if m:
+        return [[int(x) for x in g.split(",") if x.strip()]
+                for g in re.findall(r"\{([\d, ]*)\}", m.group(1))]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n, g = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        return ids.reshape(n, g).tolist()
+    return None
+
+
+def expected_groups(mesh, axis: str) -> List[List[int]]:
+    """Device-id groups a reduction over mesh axis ``axis`` must form:
+    one group per cross-section, each holding the ids along ``axis``."""
+    ids = np.vectorize(lambda d: d.id)(mesh.devices)
+    k = list(mesh.axis_names).index(axis)
+    moved = np.moveaxis(ids, k, -1)
+    return moved.reshape(-1, ids.shape[k]).tolist()
+
+
+def _norm(groups: Iterable[Iterable[int]]) -> Tuple:
+    return tuple(sorted(tuple(sorted(g)) for g in groups))
+
+
+def assert_replica_groups(compiled_text: str, mesh, axis: str,
+                          min_count: int = 1) -> None:
+    """Assert the compiled module carries at least ``min_count``
+    ``all-reduce`` ops whose replica groups are exactly the groups of
+    mesh axis ``axis`` — e.g. pods {0,2},{1,3} on a 2x2 (data, pod)
+    mesh.  Generalizes the PR 5 hard-coded group-string check."""
+    want = _norm(expected_groups(mesh, axis))
+    found = 0
+    seen = []
+    for line in compiled_text.splitlines():
+        if "all-reduce" not in line:
+            continue
+        groups = parse_replica_groups(line)
+        if groups is None:
+            continue
+        seen.append(groups)
+        if _norm(groups) == want:
+            found += 1
+    if found < min_count:
+        raise AssertionError(
+            f"no all-reduce grouped over mesh axis {axis!r} "
+            f"(want {list(want)}, saw {seen})")

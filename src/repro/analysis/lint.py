@@ -1,0 +1,278 @@
+"""Level-1 static analysis: AST lints over the repo's implicit invariants.
+
+Nine PRs of engine work rest on conventions — no host syncs inside
+jitted scan bodies, PRNG keys never reused, collectives cast *before*
+the reduce, Pallas index maps pure in their grid arguments — that were
+each hand-asserted once and can silently rot.  This module is the small
+framework that turns them into machine-enforced rules:
+
+  * a rule registry (``@register``); each rule is a pure function from
+    a parsed source file (or the repo, for cross-file rules) to
+    ``Finding``s;
+  * per-line / per-file suppression via ``# repro: noqa[rule-name]``
+    followed by a mandatory one-line justification (bare suppressions
+    are themselves a lint error — see ``noqa-hygiene``);
+  * human and JSON output (stable schema, ``JSON_SCHEMA_VERSION``);
+  * a CLI (``python -m repro.analysis``) wired into ``make
+    check-static`` which the default ``make test-fast`` path runs.
+
+Rules live in ``rules_*.py`` siblings; ``analysis/contracts.py`` holds
+the level-2 compiled-artifact checkers (HLO / retrace / donation).
+Adding a rule: write ``def check(file: SourceFile) -> list[Finding]``,
+decorate with ``@register("my-rule", "one-line doc")``, import the
+module from ``repro.analysis`` so registration runs, and document it in
+``docs/DESIGN.md`` §11 (``tests/test_docs.py`` keeps the catalog in
+sync with this registry).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence
+
+JSON_SCHEMA_VERSION = 1
+
+# suppression syntax: a comment of the form
+#     "repro: noqa[rule-a,rule-b] -- why this is deliberate"
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa\[([^\]]*)\](.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative, '/'-separated
+    line: int          # 1-indexed
+    message: str
+
+    def to_dict(self) -> Dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """A parsed python file handed to AST rules."""
+    path: str                    # repo-relative
+    text: str
+    tree: ast.Module
+
+    @property
+    def lines(self) -> List[str]:
+        return self.text.splitlines()
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    doc: str                     # one-line, surfaced in --list / DESIGN §11
+    check: Callable              # SourceFile -> List[Finding]
+    scope: str = "python"        # "python" (per .py file) | "repo" (once)
+    paths: Sequence[str] = ()    # fnmatch globs; empty = every file in scope
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(name: str, doc: str, *, scope: str = "python",
+             paths: Sequence[str] = ()):
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate rule {name!r}")
+        _REGISTRY[name] = Rule(name=name, doc=doc, check=fn, scope=scope,
+                               paths=tuple(paths))
+        return fn
+    return deco
+
+
+def all_rules() -> Dict[str, Rule]:
+    # import for the registration side effect; cheap and idempotent
+    from repro.analysis import (rules_docs, rules_dtype,  # noqa: F401
+                                rules_host_sync, rules_pallas, rules_prng)
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# suppression
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    rules: List[str]
+    justified: bool
+
+
+def parse_suppressions(text: str) -> List[Suppression]:
+    """Suppressions live in real COMMENT tokens only — a docstring that
+    *mentions* the noqa syntax (this module's own, say) is not one."""
+    import io
+    import tokenize
+    out = []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        tokens = None
+    if tokens is None:          # non-parseable: fall back to line regex
+        comments = [(i, line) for i, line in
+                    enumerate(text.splitlines(), start=1)]
+    else:
+        comments = [(t.start[0], t.string) for t in tokens
+                    if t.type == tokenize.COMMENT]
+    for i, comment in comments:
+        m = _NOQA_RE.search(comment)
+        if m:
+            rules = [r.strip() for r in m.group(1).split(",") if r.strip()]
+            just = m.group(2).strip().lstrip("-—: ").strip()
+            out.append(Suppression(line=i, rules=rules, justified=bool(just)))
+    return out
+
+
+def _is_suppressed(f: Finding, sups: List[Suppression]) -> bool:
+    for s in sups:
+        if f.rule in s.rules and (s.line == f.line or s.line == 1):
+            return True           # same line, or file-level (line 1) noqa
+    return False
+
+
+def check_noqa_hygiene(path: str, text: str,
+                       known: Sequence[str]) -> List[Finding]:
+    """``noqa-hygiene``: every suppression must name a registered rule and
+    carry an inline justification — a bare ``# repro: noqa[x]`` hides a
+    finding without recording *why* the exception is deliberate."""
+    out = []
+    for s in parse_suppressions(text):
+        for r in s.rules:
+            if r not in known:
+                out.append(Finding("noqa-hygiene", path, s.line,
+                                   f"suppression names unknown rule {r!r}"))
+        if not s.rules:
+            out.append(Finding("noqa-hygiene", path, s.line,
+                               "suppression lists no rules"))
+        if not s.justified:
+            out.append(Finding(
+                "noqa-hygiene", path, s.line,
+                "suppression lacks a justification (write `# repro: "
+                "noqa[rule] -- why this sync/cast/... is deliberate`)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def _rule_applies(rule: Rule, relpath: str) -> bool:
+    if not rule.paths:
+        return True
+    return any(fnmatch.fnmatch(relpath, pat) for pat in rule.paths)
+
+
+def iter_python_files(root: Path) -> List[Path]:
+    return sorted((root / "src" / "repro").rglob("*.py"))
+
+
+def run_lint(root: Path, rules: Optional[Dict[str, Rule]] = None,
+             files: Optional[Sequence[Path]] = None) -> List[Finding]:
+    """Run ``rules`` (default: full registry) over the tree at ``root``.
+
+    ``files`` narrows the python-scope rules to an explicit list (used by
+    the fixture tests); repo-scope rules always see the whole root.
+    Suppressions are applied here, *after* rule execution, so rules stay
+    oblivious to the mechanism; ``noqa-hygiene`` runs over every scanned
+    file regardless of the selected rule subset.
+    """
+    rules = all_rules() if rules is None else rules
+    known = sorted(all_rules())
+    py_files = list(files) if files is not None else iter_python_files(root)
+
+    findings: List[Finding] = []
+    for path in py_files:
+        rel = path.relative_to(root).as_posix()
+        text = path.read_text()
+        try:
+            tree = ast.parse(text, filename=str(path))
+        except SyntaxError as e:
+            findings.append(Finding("syntax", rel, e.lineno or 1, str(e)))
+            continue
+        sf = SourceFile(path=rel, text=text, tree=tree)
+        sups = parse_suppressions(text)
+        for rule in rules.values():
+            if rule.scope != "python" or not _rule_applies(rule, rel):
+                continue
+            for f in rule.check(sf):
+                if not _is_suppressed(f, sups):
+                    findings.append(f)
+        if "noqa-hygiene" in rules:
+            findings.extend(check_noqa_hygiene(rel, text, known))
+    for rule in rules.values():
+        if rule.scope == "repo":
+            findings.extend(rule.check(root))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+# `noqa-hygiene` registers through the same decorator so it shows up in
+# the catalog, but its real implementation runs inside `run_lint` (it
+# must see suppression comments, which are stripped before rules do).
+register("noqa-hygiene",
+         "every `# repro: noqa[rule]` names a known rule and carries an "
+         "inline justification")(lambda sf: [])
+
+
+def to_json(findings: Sequence[Finding],
+            rules: Optional[Dict[str, Rule]] = None) -> Dict:
+    rules = all_rules() if rules is None else rules
+    counts: Dict[str, int] = {}
+    for f in findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return {
+        "version": JSON_SCHEMA_VERSION,
+        "rules": sorted(rules),
+        "findings": [f.to_dict() for f in findings],
+        "counts": counts,
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static lints (level 1 of repro.analysis)")
+    p.add_argument("--root", default=".", help="repo root (default: cwd)")
+    p.add_argument("--json", action="store_true", help="machine output")
+    p.add_argument("--list", action="store_true", dest="list_rules",
+                   help="print the rule catalog and exit")
+    p.add_argument("--rule", action="append", default=None,
+                   help="run only these rules (repeatable)")
+    args = p.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for name in sorted(rules):
+            print(f"{name}: {rules[name].doc}")
+        return 0
+    if args.rule:
+        unknown = set(args.rule) - set(rules)
+        if unknown:
+            p.error(f"unknown rule(s): {sorted(unknown)}")
+        rules = {n: rules[n] for n in args.rule}
+
+    findings = run_lint(Path(args.root).resolve(), rules=rules)
+    if args.json:
+        print(json.dumps(to_json(findings, rules), indent=2))
+    else:
+        for f in findings:
+            print(f)
+        print(f"check-static: {len(findings)} finding(s), "
+              f"{len(rules)} rule(s) active")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,138 @@
+"""Bench/docs drift (L5): every `BENCH_*.json` key the docs cite must
+actually be emitted.
+
+README.md and docs/DESIGN.md quote benchmark-artifact keys
+(`guard_on_over_off`, `{host,scan}_steps_per_s`, ...) as evidence for
+perf claims.  When a benchmark renames a key, the prose silently keeps
+promising a number nobody produces.  This rule cross-checks every
+backticked snake_case token in a paragraph that mentions a
+``BENCH_*.json`` artifact against (a) the keys of the committed
+artifacts at the repo root (recursively flattened) and (b) string
+literals in ``benchmarks/*.py`` — and checks that every concretely
+named artifact exists or is emitted by a benchmark.
+
+Doc shorthand is expanded: ``{host,scan}_steps_per_s`` tries both
+alternatives, ``*_req_per_s_best`` and ``<arch>_steps_per_s`` are
+treated as globs that must match at least one real key.  Extends
+``make docs-check`` (``tests/test_docs.py`` runs this rule as a test).
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import itertools
+import json
+import re
+from pathlib import Path
+from typing import List, Set
+
+from repro.analysis.lint import Finding, register
+
+_DOCS = ("README.md", "docs/DESIGN.md")
+_BENCH_RE = re.compile(r"BENCH_[\w*]+\.json")
+_TOKEN_RE = re.compile(r"`([a-z0-9_{},*<>]*_[a-z0-9_{},*<>]*)`")
+_BRACE_RE = re.compile(r"\{([^{}]*)\}")
+# only tokens shaped like benchmark keys are checked — prose in a bench
+# paragraph also backticks function and config names, which are the
+# path-reference checker's problem (tests/test_docs.py), not ours
+_KEY_SUFFIXES = ("_per_s", "_ms", "_bytes", "_speedup", "_best")
+
+
+def _is_key_shaped(token: str) -> bool:
+    return "_over_" in token or token.endswith(_KEY_SUFFIXES)
+
+
+def _flatten_keys(obj, out: Set[str]):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if isinstance(k, str):
+                out.add(k)
+            _flatten_keys(v, out)
+    elif isinstance(obj, list):
+        for v in obj:
+            _flatten_keys(v, out)
+
+
+def _emitted_keys(root: Path) -> Set[str]:
+    keys: Set[str] = set()
+    for artifact in root.glob("BENCH_*.json"):
+        try:
+            _flatten_keys(json.loads(artifact.read_text()), keys)
+        except (json.JSONDecodeError, OSError):
+            continue
+    for src in (root / "benchmarks").glob("**/*.py"):
+        try:
+            tree = ast.parse(src.read_text())
+        except (SyntaxError, OSError):
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                keys.add(node.value)
+    return keys
+
+
+def _expand_braces(token: str) -> List[str]:
+    groups = _BRACE_RE.findall(token)
+    if not groups:
+        return [token]
+    template = _BRACE_RE.sub("{}", token)
+    return [template.format(*combo)
+            for combo in itertools.product(*(g.split(",") for g in groups))]
+
+
+def _paragraphs(text: str):
+    start, block = 1, []
+    for i, line in enumerate(text.splitlines(), start=1):
+        if line.strip():
+            if not block:
+                start = i
+            block.append(line)
+        elif block:
+            yield start, "\n".join(block)
+            block = []
+    if block:
+        yield start, "\n".join(block)
+
+
+@register("bench-docs-drift",
+          "every BENCH_*.json key cited in README/DESIGN is emitted by a "
+          "benchmark; every named artifact exists",
+          scope="repo")
+def check_bench_docs_drift(root: Path) -> List[Finding]:
+    emitted = _emitted_keys(root)
+    bench_sources = "\n".join(
+        p.read_text() for p in (root / "benchmarks").glob("**/*.py"))
+    out: List[Finding] = []
+    for rel in _DOCS:
+        doc = root / rel
+        if not doc.exists():
+            continue
+        for lineno, para in _paragraphs(doc.read_text()):
+            mentions = set(_BENCH_RE.findall(para))
+            if not mentions:
+                continue
+            for artifact in mentions:
+                if "*" in artifact:
+                    continue
+                if not (root / artifact).exists() and \
+                        artifact not in bench_sources:
+                    out.append(Finding(
+                        "bench-docs-drift", rel, lineno,
+                        f"doc cites `{artifact}` but no such artifact "
+                        f"exists and no benchmark emits it"))
+            for raw in _TOKEN_RE.findall(para):
+                if not _is_key_shaped(raw):
+                    continue
+                candidates = _expand_braces(raw)
+                globby = [c.replace("<arch>", "*").replace("<name>", "*")
+                          for c in candidates]
+                ok = any(
+                    (("*" in g and fnmatch.filter(emitted, g)) or g in emitted)
+                    for g in globby)
+                if not ok:
+                    out.append(Finding(
+                        "bench-docs-drift", rel, lineno,
+                        f"doc cites bench key `{raw}` but no committed "
+                        f"BENCH_*.json artifact or benchmarks/*.py source "
+                        f"emits it"))
+    return out

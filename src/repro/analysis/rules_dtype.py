@@ -1,0 +1,114 @@
+"""dtype drift (L3).
+
+``dtype-widen``: device code in this repo is fp32 (accumulators) / bf16
+(wire, kernels io) by contract — DESIGN.md §5/§9.  Requesting a 64-bit
+dtype from ``jnp`` constructors or ``.astype(float)`` (python ``float``
+is float64 under x64) silently doubles memory and wrecks the Pallas
+kernels' tiling assumptions the moment ``jax_enable_x64`` flips on.
+Host-side ``np.float64`` (the metric logs) is deliberately exempt — the
+rule only matches ``jnp`` constructors and bare ``.astype``.
+
+``collective-cast-order``: casting the *result* of a ``psum``/``pmean``
+to a narrow dtype means the collective itself already moved full-width
+bytes — the exact bug PR 5 fixed in ``train/compress.py`` (cast must
+happen *before* the reduce for the documented 2x wire saving to be
+true).  Widening casts after the reduce (bf16 -> fp32 upcast) are the
+correct pattern and are not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.astutil import call_name
+from repro.analysis.lint import Finding, SourceFile, register
+
+_WIDE = {"float64", "f64", "double"}
+_NARROW = {"bfloat16", "float16", "f16", "bf16", "int8", "float8_e4m3fn",
+           "float8_e5m2"}
+_JNP_CTORS = {"zeros", "ones", "full", "empty", "array", "asarray",
+              "arange", "linspace", "zeros_like", "ones_like", "full_like"}
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather",
+                "psum_scatter", "all_to_all"}
+
+
+def _dtype_token(node: ast.AST) -> Optional[str]:
+    """'float64' for np.float64 / jnp.float64 / "float64" / float."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Name):
+        return "float64" if node.id == "float" else node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _dtype_args(call: ast.Call):
+    """(expr, token) candidates for the dtype argument of ``call``."""
+    out = []
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            out.append((kw.value, _dtype_token(kw.value)))
+    name = call_name(call) or ""
+    ctor = name.rsplit(".", 1)[-1]
+    # positional dtype: jnp.asarray(x, float64-ish), jnp.zeros(shape, dt)
+    if ctor in _JNP_CTORS and len(call.args) >= 2:
+        out.append((call.args[1], _dtype_token(call.args[1])))
+    return out
+
+
+@register("dtype-widen",
+          "no float64 / python-float dtypes in jnp constructors or "
+          ".astype on device paths (fp32/bf16 contract, DESIGN §5)")
+def check_dtype_widen(sf: SourceFile) -> List[Finding]:
+    out = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node) or ""
+        is_astype = (isinstance(node.func, ast.Attribute)
+                     and node.func.attr == "astype")
+        if is_astype and node.args:
+            tok = _dtype_token(node.args[0])
+            if tok in _WIDE:
+                out.append(Finding(
+                    "dtype-widen", sf.path, node.lineno,
+                    f"`.astype({ast.unparse(node.args[0])})` widens to "
+                    f"float64 — device accumulators are fp32 by contract"))
+            continue
+        if name.startswith(("jnp.", "jax.numpy.")):
+            for expr, tok in _dtype_args(node):
+                if tok in _WIDE:
+                    out.append(Finding(
+                        "dtype-widen", sf.path, node.lineno,
+                        f"`{name}(... dtype={ast.unparse(expr)})` "
+                        f"requests a 64-bit device array — keep device "
+                        f"state fp32/bf16 (host metrics may use np.float64)"))
+    return out
+
+
+@register("collective-cast-order",
+          "narrow casts happen before psum/pmean, never on the reduced "
+          "result (the collective must move the narrow bytes)")
+def check_collective_cast_order(sf: SourceFile) -> List[Finding]:
+    out = []
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype" and node.args):
+            continue
+        recv = node.func.value
+        if not isinstance(recv, ast.Call):
+            continue
+        rname = call_name(recv) or ""
+        if rname.rsplit(".", 1)[-1] not in _COLLECTIVES:
+            continue
+        tok = _dtype_token(node.args[0])
+        if tok in _NARROW:
+            out.append(Finding(
+                "collective-cast-order", sf.path, node.lineno,
+                f"`{rname}(...).astype({ast.unparse(node.args[0])})` "
+                f"narrows *after* the reduce — the wire already moved "
+                f"full-width bytes; cast the operand before the "
+                f"collective (train/compress.py shows the pattern)"))
+    return out

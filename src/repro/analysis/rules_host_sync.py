@@ -1,0 +1,270 @@
+"""Host-sync lints (L1).
+
+``host-sync-jit``: a host synchronization (``float()``/``int()``/
+``bool()`` on array data, ``.item()``, ``np.asarray``, ``jax.device_get``)
+inside a function that is traced — jit-decorated, passed to
+``lax.scan``/``vmap``/``grad``/``shard_map``, or (same-module) called
+from one.  These either raise ``ConcretizationTypeError`` at trace time
+or, worse, silently constant-fold a value that should be traced.
+
+``host-sync-loop``: a per-element device fetch inside a host-side
+``for``/``while`` loop — e.g. ``np.asarray(pool[slot])`` per iteration,
+which dispatches a gather and a D2H transfer every pass when one fetch
+of the whole array outside the loop would do.  This is the pattern that
+throttles the serving sweep and the epoch boundary, so it is scoped to
+``train/``, ``serve/`` and ``core/``.  Deliberate sync points (the host
+parity oracle, the documented once-per-sweep fetch) carry
+``# repro: noqa[host-sync-loop]`` with a justification.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.astutil import (HOST_BUILTINS, assign_targets, call_name,
+                                    decorator_names, dotted, root_name)
+from repro.analysis.lint import Finding, SourceFile, register
+
+SYNC_BUILTINS = {"float", "int", "bool"}
+NP_SYNCS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+            "onp.asarray", "onp.array"}
+DEVICE_GET = {"jax.device_get", "device_get"}
+
+# decorators / callables whose function argument is traced
+_JIT_DECOS = {"jax.jit", "jit", "pjit", "jax.pjit", "jax.checkpoint",
+              "jax.remat", "jax.custom_vjp", "jax.custom_jvp"}
+_TRACING_CALLS = _JIT_DECOS | {
+    "jax.lax.scan", "lax.scan", "jax.lax.map", "lax.map",
+    "jax.lax.cond", "lax.cond", "jax.lax.switch", "lax.switch",
+    "jax.lax.while_loop", "lax.while_loop",
+    "jax.lax.fori_loop", "lax.fori_loop",
+    "jax.vmap", "vmap", "jax.grad", "jax.value_and_grad",
+    "shard_map", "jax.experimental.shard_map.shard_map",
+}
+
+
+def _own_nodes(fn) -> List[ast.AST]:
+    """``ast.walk(fn)`` minus everything owned by nested function defs —
+    nested defs are analyzed as functions in their own right."""
+    skip: Set[int] = set()
+    for d in ast.walk(fn):
+        if isinstance(d, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)) and d is not fn:
+            skip.update(id(x) for x in ast.walk(d))
+    return [n for n in ast.walk(fn) if id(n) not in skip or n is fn]
+
+
+def _is_shape_math(expr: ast.AST) -> bool:
+    """True when the expression only touches static shape metadata."""
+    saw_meta = False
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in ("shape", "size",
+                                                            "ndim", "dtype"):
+            saw_meta = True
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name == "len" or (name or "").startswith(("np.", "numpy.")):
+                saw_meta = True
+    return saw_meta
+
+
+def _sync_calls(nodes) -> List[ast.Call]:
+    out = []
+    for node in nodes:
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name in SYNC_BUILTINS and len(node.args) == 1 and \
+                not isinstance(node.args[0], ast.Constant) and \
+                not _is_shape_math(node.args[0]):
+            out.append(node)
+        elif name in NP_SYNCS and node.args and \
+                not _is_shape_math(node.args[0]):
+            out.append(node)
+        elif name in DEVICE_GET:
+            out.append(node)
+        elif isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and not node.args:
+            out.append(node)
+    return out
+
+
+def _device_functions(tree: ast.Module) -> Set[ast.AST]:
+    """Functions traced by jax: jit-decorated, passed to a tracing call,
+    nested inside one of those, or (same-module, by bare name) called
+    from one — the transitive closure."""
+    defs = [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    by_name: Dict[str, List[ast.AST]] = {}
+    for d in defs:
+        by_name.setdefault(d.name, []).append(d)
+
+    roots: Set[ast.AST] = set()
+    for d in defs:
+        if set(decorator_names(d)) & _JIT_DECOS:
+            roots.add(d)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and call_name(node) in _TRACING_CALLS:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    roots.update(by_name.get(arg.id, []))
+                elif isinstance(arg, ast.Call):
+                    # functools.partial(step_fn, ...) and friends
+                    inner = arg.args[0] if arg.args else None
+                    if isinstance(inner, ast.Name):
+                        roots.update(by_name.get(inner.id, []))
+
+    device: Set[ast.AST] = set()
+    frontier = list(roots)
+    while frontier:
+        fn = frontier.pop()
+        if fn in device:
+            continue
+        device.add(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn and node not in device:
+                frontier.append(node)
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                for callee in by_name.get(node.func.id, []):
+                    if callee not in device:
+                        frontier.append(callee)
+    return device
+
+
+@register("host-sync-jit",
+          "no float()/int()/bool()/.item()/np.asarray/device_get on array "
+          "data inside jit- or scan-traced functions")
+def check_host_sync_jit(sf: SourceFile) -> List[Finding]:
+    out = []
+    seen = set()
+    for fn in _device_functions(sf.tree):
+        for call in _sync_calls(_own_nodes(fn)):
+            if id(call) in seen:
+                continue
+            seen.add(id(call))
+            out.append(Finding(
+                "host-sync-jit", sf.path, call.lineno,
+                f"host sync `{ast.unparse(call)[:60]}` inside traced "
+                f"function `{fn.name}` — hoist it out of the jitted path"))
+    return out
+
+
+# -- host-sync-loop ---------------------------------------------------------
+
+_HOST_PRODUCERS = ("np.", "numpy.", "time.", "os.", "math.", "re.", "json.")
+
+
+def _host_names(fn) -> Set[str]:
+    """Names that (somewhere in ``fn``) hold host values: assigned from
+    numpy/builtin/python-literal expressions, or loop targets over them."""
+    host: Set[str] = set()
+
+    def value_is_host(v: ast.AST) -> bool:
+        if isinstance(v, (ast.Constant, ast.ListComp, ast.DictComp,
+                          ast.SetComp, ast.List, ast.Dict, ast.Set,
+                          ast.JoinedStr)):
+            return True
+        if isinstance(v, ast.Call):
+            name = call_name(v) or ""
+            if name in HOST_BUILTINS or name.startswith(_HOST_PRODUCERS):
+                return True
+            if isinstance(v.func, ast.Attribute):
+                # a method call on a host value stays host:
+                # np.asarray(x).reshape(-1), host_list.index(k), ...
+                return value_is_host(v.func.value)
+            return False
+        if isinstance(v, (ast.Subscript, ast.Attribute)):
+            return value_is_host(v.value)
+        if isinstance(v, ast.Name):
+            return v.id in host
+        if isinstance(v, ast.BinOp):
+            return value_is_host(v.left) and value_is_host(v.right)
+        if isinstance(v, ast.Compare):
+            return value_is_host(v.left) and \
+                all(value_is_host(c) for c in v.comparators)
+        if isinstance(v, ast.BoolOp):
+            return all(value_is_host(x) for x in v.values)
+        if isinstance(v, ast.UnaryOp):
+            return value_is_host(v.operand)
+        if isinstance(v, ast.IfExp):
+            return value_is_host(v.body) and value_is_host(v.orelse)
+        if isinstance(v, (ast.Tuple,)):
+            return all(value_is_host(e) for e in v.elts)
+        return False
+
+    # two passes so `a = np.asarray(x); b = a[i]` marks both
+    for _ in range(2):
+        for node in ast.walk(fn):
+            for name, value in assign_targets(node):
+                if value_is_host(value):
+                    host.add(name)
+            if isinstance(node, ast.For) and value_is_host(node.iter):
+                for tgt in ast.walk(node.target):
+                    if isinstance(tgt, ast.Name):
+                        host.add(tgt.id)
+    return host
+
+
+def _device_fetch_in(expr: ast.AST, host: Set[str]) -> bool:
+    """Does ``expr`` reach into device data: a subscript of a non-host
+    array, or a method call / jnp call producing a device value?  Descent
+    is pruned inside host-producing calls (np.*, len, ...)."""
+
+    def walk(node) -> bool:
+        if isinstance(node, ast.Call):
+            name = call_name(node) or ""
+            if name in HOST_BUILTINS or name.startswith(_HOST_PRODUCERS):
+                return False                     # host call: don't descend
+            if name.startswith(("jnp.", "jax.")):
+                return True
+            if isinstance(node.func, ast.Attribute):
+                root = root_name(node.func)
+                if root is not None and root not in host and \
+                        root not in ("np", "numpy", "math", "time", "os"):
+                    return True                  # method call on device value
+            return any(walk(c) for c in ast.iter_child_nodes(node))
+        if isinstance(node, ast.Subscript):
+            root = root_name(node.value)
+            if root is not None and root not in host:
+                return True
+            return walk(node.slice)
+        return any(walk(c) for c in ast.iter_child_nodes(node))
+
+    return walk(expr)
+
+
+@register("host-sync-loop",
+          "no per-iteration device fetch (np.asarray(pool[i]), "
+          "float(metrics[k]), x.item()) inside host for/while loops",
+          paths=("src/repro/train/*", "src/repro/serve/*",
+                 "src/repro/core/*"))
+def check_host_sync_loop(sf: SourceFile) -> List[Finding]:
+    out = []
+    device_fns = _device_functions(sf.tree)
+    for fn in ast.walk(sf.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn in device_fns:
+            continue                   # host-sync-jit owns traced functions
+        host = _host_names(fn)
+        own = _own_nodes(fn)
+        own_ids = {id(n) for n in own}
+        loops = [n for n in own if isinstance(n, (ast.For, ast.While))]
+        seen = set()
+        for loop in loops:
+            in_loop = [n for n in ast.walk(loop) if id(n) in own_ids]
+            for call in _sync_calls(in_loop):
+                if id(call) in seen:
+                    continue
+                seen.add(id(call))
+                payload = call.func.value if (
+                    isinstance(call.func, ast.Attribute) and
+                    call.func.attr == "item") else call.args[0]
+                if _device_fetch_in(payload, host):
+                    out.append(Finding(
+                        "host-sync-loop", sf.path, call.lineno,
+                        f"per-iteration device fetch "
+                        f"`{ast.unparse(call)[:60]}` — fetch the array "
+                        f"once outside the loop (or justify with noqa)"))
+    return out

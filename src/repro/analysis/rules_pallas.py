@@ -1,0 +1,159 @@
+"""Pallas kernel hygiene (L4).
+
+``pallas-blockspec``: a ``pl.BlockSpec`` index map must be a pure
+function of its grid indices (plus static python ints like block
+counts).  Referencing a *traced* value — a kernel operand or anything
+derived from one — in the index map is a correctness bug Pallas reports
+obscurely (or not at all in interpret mode).  The rule tracks which
+names in the enclosing function are traced (non-static jit params and
+values derived from them; shape-tuple unpacking yields static ints) and
+flags index-map closures over them.
+
+``pallas-interpret``: every ``pl.pallas_call`` and every ``_pallas*``
+kernel entry invoked from a ``kernels/*/ops.py`` dispatcher must plumb
+``interpret=`` through explicitly, and every public ``*_op`` wrapper
+must accept it — CPU validation (``tests/test_kernels.py``, the parity
+matrix) relies on forcing interpret mode from the outside; a dropped
+kwarg silently pins the kernel to the default and the parity tests stop
+testing what ships.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+from typing import List, Optional, Set
+
+from repro.analysis.astutil import (call_name, param_names, static_argnames)
+from repro.analysis.lint import Finding, SourceFile, register
+
+_BUILTINS = set(dir(builtins))
+_STATIC_ATTRS = ("shape", "size", "ndim", "dtype")
+
+
+def _module_names(tree: ast.Module) -> Set[str]:
+    names: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            names.update(a.asname or a.name.split(".")[0] for a in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            names.update(a.asname or a.name for a in node.names)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            names.add(node.name)
+        else:
+            for tgt in ast.walk(node):
+                if isinstance(tgt, ast.Name) and \
+                        isinstance(tgt.ctx, ast.Store):
+                    names.add(tgt.id)
+    return names
+
+
+def _is_static_value(value: ast.AST) -> bool:
+    """Shape/metadata math is static even when rooted at traced names."""
+    for node in ast.walk(value):
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(node, ast.Call) and call_name(node) == "len":
+            return True
+    return False
+
+
+def _traced_names(fn) -> Set[str]:
+    """Names in ``fn`` holding traced arrays: non-static params plus
+    simple derivations of them."""
+    traced = set(param_names(fn)) - static_argnames(fn)
+    for stmt in ast.walk(fn):
+        if not isinstance(stmt, ast.Assign):
+            continue
+        value = stmt.value
+        static = _is_static_value(value) or isinstance(value, ast.Constant)
+        mentions = {n.id for n in ast.walk(value)
+                    if isinstance(n, ast.Name)}
+        for tgt in stmt.targets:
+            for name_node in ast.walk(tgt):
+                if isinstance(name_node, ast.Name):
+                    if not static and mentions & traced:
+                        traced.add(name_node.id)
+    return traced
+
+
+def _index_map(call: ast.Call) -> Optional[ast.AST]:
+    if len(call.args) >= 2:
+        return call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "index_map":
+            return kw.value
+    return None
+
+
+@register("pallas-blockspec",
+          "BlockSpec index maps are pure in their grid indices — no "
+          "closure over traced values",
+          paths=("src/repro/kernels/*",))
+def check_pallas_blockspec(sf: SourceFile) -> List[Finding]:
+    out = []
+    module_names = _module_names(sf.tree)
+    for fn in [n for n in ast.walk(sf.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        traced = _traced_names(fn)
+        local_defs = {d.name: d for d in ast.walk(fn)
+                      if isinstance(d, ast.FunctionDef)}
+        for call in [n for n in ast.walk(fn) if isinstance(n, ast.Call)]:
+            if (call_name(call) or "").rsplit(".", 1)[-1] != "BlockSpec":
+                continue
+            imap = _index_map(call)
+            if imap is None:
+                continue
+            if isinstance(imap, ast.Lambda):
+                params, body = {a.arg for a in imap.args.args}, imap.body
+            elif isinstance(imap, ast.Name) and imap.id in local_defs:
+                d = local_defs[imap.id]
+                params, body = set(param_names(d)), d
+            else:
+                continue
+            for name in [n for n in ast.walk(body)
+                         if isinstance(n, ast.Name)
+                         and isinstance(n.ctx, ast.Load)]:
+                if name.id in params or name.id in _BUILTINS or \
+                        name.id in module_names:
+                    continue
+                if name.id in traced:
+                    out.append(Finding(
+                        "pallas-blockspec", sf.path, call.lineno,
+                        f"BlockSpec index map references traced value "
+                        f"`{name.id}` — index maps must be pure in the "
+                        f"grid indices (static ints are fine)"))
+    return out
+
+
+@register("pallas-interpret",
+          "pl.pallas_call and _pallas* dispatch calls plumb interpret= "
+          "through; *_op wrappers accept it",
+          paths=("src/repro/kernels/*",))
+def check_pallas_interpret(sf: SourceFile) -> List[Finding]:
+    out = []
+    is_ops = sf.path.endswith("/ops.py")
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call):
+            name = call_name(node) or ""
+            kws = {kw.arg for kw in node.keywords}
+            if name.rsplit(".", 1)[-1] == "pallas_call" and \
+                    "interpret" not in kws:
+                out.append(Finding(
+                    "pallas-interpret", sf.path, node.lineno,
+                    "pl.pallas_call without interpret= — CPU validation "
+                    "cannot force interpret mode"))
+            elif is_ops and name.startswith("_pallas") and \
+                    "interpret" not in kws and None not in kws:
+                out.append(Finding(
+                    "pallas-interpret", sf.path, node.lineno,
+                    f"`{name}(...)` drops interpret= — the ops dispatcher "
+                    f"must plumb it through to the kernel"))
+        if is_ops and isinstance(node, ast.FunctionDef) and \
+                node.name.endswith("_op") and \
+                "interpret" not in param_names(node):
+            out.append(Finding(
+                "pallas-interpret", sf.path, node.lineno,
+                f"public wrapper `{node.name}` does not accept "
+                f"interpret= — parity tests cannot reach the kernel"))
+    return out

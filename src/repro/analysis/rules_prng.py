@@ -1,0 +1,162 @@
+"""PRNG discipline (L2): a key consumed twice is a correlated-stream bug.
+
+A key is *consumed* when passed to ``jax.random.split`` or to any
+sampler (``normal``, ``randint``, ``categorical``, ...).  Re-using the
+same consumed key in another sampler/split call silently draws
+correlated randomness — the classic form is sampling with ``key`` in a
+loop without re-deriving it each iteration.  ``fold_in`` (and
+``PRNGKey``/``key``) are derivation, not consumption: fanning several
+``fold_in(key, i)`` streams off one base key is the sanctioned idiom
+(``train/loop.py`` does exactly this) and is never flagged.
+
+Tracked key expressions are bare names (``key``) and constant-index
+subscripts (``ks[0]``); reassignment of the name resets it.  Branches
+of an ``if`` are analyzed independently and merged conservatively; loop
+bodies are analyzed twice so a consumption surviving to the next
+iteration is caught.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.astutil import assign_targets, call_name
+from repro.analysis.lint import Finding, SourceFile, register
+
+_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data",
+             "clone"}
+_RANDOM_PREFIXES = ("jax.random.", "random.", "jrandom.", "jr.")
+
+
+def _random_fn(call: ast.Call) -> Optional[str]:
+    """'split' / 'normal' / ... for a jax.random call, else None."""
+    name = call_name(call)
+    if not name:
+        return None
+    for pre in _RANDOM_PREFIXES:
+        if name.startswith(pre):
+            return name[len(pre):]
+    return None
+
+
+def _key_expr(call: ast.Call) -> Optional[str]:
+    """Canonical text of the key argument when it is trackable."""
+    arg = None
+    if call.args:
+        arg = call.args[0]
+    else:
+        for kw in call.keywords:
+            if kw.arg == "key":
+                arg = kw.value
+    if isinstance(arg, ast.Name):
+        return arg.id
+    if isinstance(arg, ast.Subscript) and \
+            isinstance(arg.value, ast.Name) and \
+            isinstance(arg.slice, ast.Constant):
+        return f"{arg.value.id}[{arg.slice.value!r}]"
+    return None
+
+
+class _Scope:
+    """consumed: key expr -> line of the consuming call."""
+
+    def __init__(self, consumed: Optional[Dict[str, int]] = None):
+        self.consumed: Dict[str, int] = dict(consumed or {})
+        self.findings: List[Finding] = []
+
+    def copy(self) -> "_Scope":
+        s = _Scope(self.consumed)
+        s.findings = self.findings      # shared sink
+        return s
+
+    def reset_name(self, name: str):
+        for k in [k for k in self.consumed
+                  if k == name or k.startswith(name + "[")]:
+            del self.consumed[k]
+
+
+def _scan_expr(node: ast.AST, scope: _Scope, path: str):
+    for call in [n for n in ast.walk(node) if isinstance(n, ast.Call)]:
+        fn = _random_fn(call)
+        if fn is None or (fn in _DERIVERS and fn != "split"):
+            continue                   # fold_in/PRNGKey derive, not consume
+        key = _key_expr(call)
+        if key is None:
+            continue
+        prev = scope.consumed.get(key)
+        if prev is not None:
+            where = (f"already consumed at line {prev}"
+                     if prev != call.lineno
+                     else "re-consumed on every loop iteration")
+            scope.findings.append(Finding(
+                "key-reuse", path, call.lineno,
+                f"key `{key}` {where} is passed to jax.random.{fn} — "
+                f"split or fold_in first"))
+        else:
+            scope.consumed[key] = call.lineno
+
+
+def _scan_block(stmts, scope: _Scope, path: str):
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue                       # own scope, analyzed separately
+        if isinstance(stmt, ast.If):
+            _scan_expr(stmt.test, scope, path)
+            a, b = scope.copy(), scope.copy()
+            _scan_block(stmt.body, a, path)
+            _scan_block(stmt.orelse, b, path)
+            scope.consumed = {**a.consumed, **b.consumed}
+            continue
+        if isinstance(stmt, (ast.For, ast.While)):
+            if isinstance(stmt, ast.For):
+                _scan_expr(stmt.iter, scope, path)
+            else:
+                _scan_expr(stmt.test, scope, path)
+            # two passes: pass 1 (findings discarded) computes the
+            # consumed-set surviving one iteration; pass 2 reports — so a
+            # key consumed each iteration without re-derivation is caught
+            first = _Scope(scope.consumed)
+            _scan_block(stmt.body, first, path)
+            second = _Scope(first.consumed)
+            second.findings = scope.findings
+            _scan_block(stmt.body, second, path)
+            scope.consumed = second.consumed
+            _scan_block(stmt.orelse, scope, path)
+            continue
+        if isinstance(stmt, (ast.With,)):
+            for item in stmt.items:
+                _scan_expr(item.context_expr, scope, path)
+            _scan_block(stmt.body, scope, path)
+            continue
+        if isinstance(stmt, ast.Try):
+            _scan_block(stmt.body, scope, path)
+            for h in stmt.handlers:
+                _scan_block(h.body, scope.copy(), path)
+            _scan_block(stmt.finalbody, scope, path)
+            continue
+        # simple statement: consumption scan, then reassignment resets
+        _scan_expr(stmt, scope, path)
+        for name, _value in assign_targets(stmt):
+            scope.reset_name(name)
+    return scope
+
+
+@register("key-reuse",
+          "a PRNG key consumed by split()/a sampler is never passed to "
+          "another sampler without an intervening split/fold_in")
+def check_key_reuse(sf: SourceFile) -> List[Finding]:
+    scope = _Scope()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn_scope = _Scope()
+            fn_scope.findings = scope.findings
+            _scan_block(node.body, fn_scope, sf.path)
+    # deduplicate (nested walks can visit a function twice)
+    uniq, seen = [], set()
+    for f in scope.findings:
+        k = (f.line, f.message)
+        if k not in seen:
+            seen.add(k)
+            uniq.append(f)
+    return uniq

@@ -132,7 +132,7 @@ def generate(
     t0 = time.time()
     for i in range(max_new_tokens - 1):
         # one device->host sync per `sync_every` steps, not per token
-        if done is not None and i % sync_every == 0 and bool(done.all()):
+        if done is not None and i % sync_every == 0 and bool(done.all()):  # repro: noqa[host-sync-loop] -- the amortized early-exit probe; rate is capped by sync_every
             break
         key = jax.random.fold_in(key, i)
         logits, cache = decode(params, cache, tok)
@@ -514,8 +514,8 @@ class SlotEngine:
             self._state = self._decode_jit(self.params, self._state, sub)
             self.n_decode_dispatches += 1
             # ONE host sync per scan: live flags + emission counts
-            live = np.asarray(self._state["live"])
-            n_out = np.asarray(self._state["n_out"])
+            live = np.asarray(self._state["live"])    # repro: noqa[host-sync-loop] -- the documented once-per-scan sync point (DESIGN §4)
+            n_out = np.asarray(self._state["n_out"])  # repro: noqa[host-sync-loop] -- fetched alongside live, same single sync point
             # deadline sweep over active slots: expired ones are killed
             # on device (live cleared) and read out below like finished
             now = clock() - t0
@@ -527,10 +527,15 @@ class SlotEngine:
                 self._state = self._expire_jit(self._state,
                                                jnp.asarray(kill))
                 live = live & ~kill
-            for slot in [s for s in list(active) if not live[s]]:
+            finished = [s for s in list(active) if not live[s]]
+            if finished:
+                # one fetch of the whole out pool for the sweep — indexing
+                # `out[slot]` per finished slot would dispatch a device
+                # gather + blocking D2H transfer for every eviction
+                out_pool = np.asarray(self._state["out"])  # repro: noqa[host-sync-loop] -- single pool fetch, only on sweeps that evict
+            for slot in finished:
                 req, admit_s = active.pop(slot)
-                toks = np.asarray(
-                    self._state["out"][slot])[: int(n_out[slot])]
+                toks = out_pool[slot][: int(n_out[slot])]
                 if kill[slot]:
                     self.n_expired += 1
                 completions.append(Completion(
@@ -565,7 +570,7 @@ def rnnt_greedy_reference(bundle, params, feats, feat_lens,
         for t in range(int(t_lens[b])):
             for _ in range(max_symbols):
                 logits = rnnt_mod.joint_step(params, enc[b: b + 1, t], g)
-                k = int(jnp.argmax(logits[0]))
+                k = int(jnp.argmax(logits[0]))  # repro: noqa[host-sync-loop] -- textbook host-loop oracle; per-symbol sync is its definition
                 if k == rnnt_mod.BLANK_ID:
                     break
                 toks.append(k)

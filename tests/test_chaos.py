@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.contracts import assert_retrace_free
 from repro.configs import get_config
 from repro.configs.base import PGMConfig, TrainConfig
 from repro.core.lastlayer import make_proj_for
@@ -89,14 +90,14 @@ def test_guard_on_finite_data_is_bitwise_and_never_retraces(lm):
         assert _bitwise_equal(a, b)
     eng = runs[True][3]
     assert int(eng.last_n_skipped) == 0
-    assert eng.n_epoch_traces == 1
-    # poisoned epoch on the SAME engine: one step skipped, no retrace
+    # poisoned epoch on the SAME engine: one step skipped, no retrace —
+    # non-finiteness is traced data, so the warm executable must serve it
     idx, w = eng.full_plan(1)
     w = np.array(w, np.float32)
     w[1] = np.nan
-    p, o, losses = eng.run_epoch(*runs[True][:2], _tc().lr,
-                                 (idx, jnp.asarray(w)))
-    assert eng.n_epoch_traces == 1, "guard retraced on a poisoned plan"
+    w = jnp.asarray(w)
+    with assert_retrace_free("guarded epoch on a poisoned plan"):
+        p, o, losses = eng.run_epoch(*runs[True][:2], _tc().lr, (idx, w))
     assert int(eng.last_n_skipped) == 1
     assert np.asarray(eng.last_skipped).tolist() == [0.0, 1.0, 0.0, 0.0]
     assert float(losses[1]) == 0.0          # skipped step reports 0

@@ -11,17 +11,16 @@
 * the bf16 collective reduces at bf16 width in the *lowered* HLO (the
   cast must precede the pmean; XLA:CPU float-normalization promotes the
   compiled reduce to f32, so the wire-width claim is asserted on the
-  pre-optimization module, pattern in the spirit of
-  ``tests/test_hlo_analysis.py``).
+  pre-optimization module through
+  ``repro.analysis.contracts.assert_collective_width``).
 """
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.contracts import assert_collective_width
 from repro.compat import shard_map
 from repro.train.compress import (bf16_compress, compressed_psum,
                                   init_error_state, topk_compress)
@@ -165,10 +164,9 @@ def test_unknown_mode_raises():
 # reduce dtype in the lowered HLO
 # ---------------------------------------------------------------------------
 
-def _lowered_all_reduce_types(mode):
-    """Element types of every stablehlo.all_reduce in the lowered module
-    of a shard_map'd compressed_psum (1-device 'pod' mesh: lowering —
-    unlike compilation — still emits the collective)."""
+def _lowered_compressed_psum(mode):
+    """Lowered module of a shard_map'd compressed_psum (1-device 'pod'
+    mesh: lowering — unlike compilation — still emits the collective)."""
     mesh = jax.make_mesh((1,), ("pod",))
 
     def f(g):
@@ -177,21 +175,15 @@ def _lowered_all_reduce_types(mode):
 
     sm = shard_map(f, mesh=mesh, in_specs=({"w": P("pod")},),
                    out_specs={"w": P("pod")})
-    txt = jax.jit(sm).lower({"w": jnp.ones((8, 4), jnp.float32)}).as_text()
-    # the reduction body of each all_reduce names its scalar operand type:
-    #   ^bb0(%arg: tensor<bf16>, ...): stablehlo.add ... : tensor<bf16>
-    types = re.findall(
-        r'all_reduce.*?\^bb0\(%\w+: tensor<(\w+)>', txt, flags=re.S)
-    assert types, "no all_reduce in lowered module"
-    return types
+    return jax.jit(sm).lower({"w": jnp.ones((8, 4), jnp.float32)})
 
 
 def test_bf16_collective_reduces_at_bf16_width_in_lowered_hlo():
-    assert set(_lowered_all_reduce_types("bf16")) == {"bf16"}
+    assert_collective_width(_lowered_compressed_psum("bf16"), dtype="bf16")
 
 
 def test_none_collective_reduces_at_f32_width_in_lowered_hlo():
-    assert set(_lowered_all_reduce_types("none")) == {"f32"}
+    assert_collective_width(_lowered_compressed_psum("none"), dtype="f32")
 
 
 def test_bf16_compress_casts_only():

@@ -29,6 +29,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.contracts import assert_retrace_free
 from repro.configs import get_config
 from repro.configs.base import PGMConfig, TrainConfig
 from repro.data.pipeline import lm_units
@@ -177,13 +178,12 @@ def test_guard_composes_with_pod_compression_bitwise():
     # a poisoned epoch on the guarded engine: every step gated off,
     # residuals included — and no retrace
     p, o, err, eng = outs[True]
-    assert eng.n_epoch_traces == 1
     before = (jax.tree.map(np.asarray, p), jax.tree.map(np.asarray, o),
               jax.tree.map(np.asarray, err))
     idx, w = eng.full_plan(1)
     w = jnp.full_like(w, jnp.nan)
-    p, o, losses = eng.run_epoch(p, o, 0.5, (idx, w))
-    assert eng.n_epoch_traces == 1
+    with assert_retrace_free("guarded compressed epoch on poisoned plan"):
+        p, o, losses = eng.run_epoch(p, o, 0.5, (idx, w))
     assert int(eng.last_n_skipped) == int(idx.shape[0])
     assert np.asarray(losses).tolist() == [0.0] * int(idx.shape[0])
     for b, a in zip(before, (p, o, eng.compress_state)):
@@ -399,13 +399,19 @@ def test_pod_topk_resume_bit_exact():
 
 @pytest.mark.slow
 def test_pod_step_hlo_collective_and_divisibility():
-    """The compiled pod step carries pod-group all-reduces; in bf16 mode
-    the lowered module reduces the (leading pod dim of the) gradient
-    leaves at bf16 width — one reduce per param leaf.  Indivisible
-    per-pod batches are a build-time error."""
+    """The pod step's compiled artifacts satisfy the level-2 contracts
+    (repro.analysis.contracts): in bf16 mode the lowered module reduces
+    the gradient leaves at bf16 width — one reduce per param leaf, wire
+    width checked pre-optimization — the compiled module's all-reduces
+    group over the pod axis on both a 2x2 (data, pod) mesh (pairs
+    {0,2},{1,3}) and a 1x4 all-pod mesh ({0,1,2,3}), the donated carry
+    is marked donor, and the epoch body stays device-resident.
+    Indivisible per-pod batches are a build-time error."""
     out = _run(textwrap.dedent("""
-        import re
         import numpy as np, jax, jax.numpy as jnp
+        from repro.analysis.contracts import (
+            assert_collective_width, assert_donated,
+            assert_no_host_transfers, assert_replica_groups)
         from repro.configs import get_config
         from repro.configs.base import PGMConfig, TrainConfig
         from repro.data.pipeline import lm_units
@@ -416,30 +422,33 @@ def test_pod_step_hlo_collective_and_divisibility():
         cfg = get_config("starcoder2-3b-smoke")
         m = build_model(cfg)
         units = lm_units(make_lm_corpus(0, 16, 10, cfg.vocab_size), 4)
-        mesh = jax.make_mesh((2, 2), ("data", "pod"))
         tc = TrainConfig(lr=0.5, optimizer="sgd", epochs=1,
                          compress_mode="bf16", pgm=PGMConfig())
-        eng = EpochEngine(m, tc, units, batch_units=2, mesh=mesh)
-        opt_init, _ = make_update_for(tc)
-        p = m.init_params(jax.random.PRNGKey(0))
-        o = opt_init(p)
-        p, o = eng.shard_state(p, o)
-        idx, w = eng.full_plan(0)
-        low = eng._run.lower(p, o, None, idx, w, jnp.float32(0.5))
-        n_leaves = len(jax.tree.leaves(p))
-        # lowered: the explicit pod reduce runs on bf16 gradient stacks
-        bf16_reduces = [l for l in low.as_text().splitlines()
-                        if "stablehlo.reduce" in l and "bf16" in l
-                        and "dimensions = [0]" in l]
-        assert len(bf16_reduces) == n_leaves, \\
-            (len(bf16_reduces), n_leaves)
-        # compiled: real all-reduces grouped over the pod axis (device
-        # pairs {0,2},{1,3} on a 2x2 (data, pod) mesh)
-        ctxt = low.compile().as_text()
-        pod_ars = [l for l in ctxt.splitlines() if "all-reduce" in l and
-                   ("{{0,2},{1,3}}" in l or "[2,2]<=[2,2]T(1,0)" in l)]
-        assert pod_ars, "no pod-axis all-reduce in compiled module"
+        for shape in ((2, 2), (1, 4)):
+            mesh = jax.make_mesh(shape, ("data", "pod"))
+            eng = EpochEngine(m, tc, units, batch_units=2, mesh=mesh)
+            opt_init, _ = make_update_for(tc)
+            p = m.init_params(jax.random.PRNGKey(0))
+            o = opt_init(p)
+            p, o = eng.shard_state(p, o)
+            idx, w = eng.full_plan(0)
+            low = eng._run.lower(p, o, None, idx, w, jnp.float32(0.5))
+            n_leaves = len(jax.tree.leaves(p))
+            # wire width: one bf16 pod reduce per gradient leaf, read
+            # off the lowered module (XLA:CPU float-normalization
+            # promotes compiled reduces, so compiled text can't prove
+            # this)
+            assert_collective_width(low, dtype="bf16",
+                                    n_expected=n_leaves)
+            # the (params, opt_state) carry is donated into the scan
+            assert_donated(low, (p, o))
+            txt = low.compile().as_text()
+            # real all-reduces grouped exactly over the pod axis
+            assert_replica_groups(txt, mesh, "pod")
+            # the whole epoch dispatch stays device-resident
+            assert_no_host_transfers(low, txt)
         # unit_size=3 batches cannot split across 2 pods
+        mesh = jax.make_mesh((2, 2), ("data", "pod"))
         units_odd = lm_units(make_lm_corpus(0, 16, 10, cfg.vocab_size), 3)
         try:
             EpochEngine(m, tc, units_odd, batch_units=1, mesh=mesh)

@@ -85,3 +85,24 @@ def test_design_section_citations_resolve():
     # the historically-dangling citation must specifically resolve now
     pgm = (REPO / "src/repro/core/pgm.py").read_text()
     assert "DESIGN.md §5" in pgm and "5" in sections
+
+
+def test_design_11_rule_catalog_matches_registry():
+    """DESIGN.md §11's lint-rule table and the live registry
+    (`repro.analysis.all_rules`) must list exactly the same rules —
+    adding a rule without documenting it (or documenting a rule that
+    was removed) fails here."""
+    import sys
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.analysis import all_rules
+
+    design = (REPO / "docs/DESIGN.md").read_text()
+    m = re.search(r"^## §11 .*?(?=^## )", design, flags=re.M | re.S)
+    assert m, "DESIGN.md has no §11 section"
+    documented = set(re.findall(r"^\| `([a-z][a-z0-9-]*)` \|", m.group(0),
+                                flags=re.M))
+    registered = set(all_rules())
+    assert documented == registered, (
+        f"DESIGN.md §11 catalog out of sync with the rule registry: "
+        f"undocumented={sorted(registered - documented)}, "
+        f"stale={sorted(documented - registered)}")

@@ -10,6 +10,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis.contracts import (assert_donated,
+                                      assert_no_host_transfers,
+                                      assert_retrace_free)
 from repro.configs import get_config
 from repro.models.api import build_model
 from repro.serve.engine import (Request, SlotEngine, generate,
@@ -157,6 +160,49 @@ def test_slot_engine_lm_parity_with_oneshot(lm):
                            jnp.asarray(r.inputs["tokens"])[None], 10,
                            eos_id=eos, sync_every=1)
         assert got[r.uid] == _trim(np.asarray(toks)[0], eos), r.uid
+
+
+def test_slot_engine_steady_state_is_recompile_free(lm):
+    """The continuous-batching zero-recompile claim (DESIGN §4),
+    asserted through the shared ``analysis.contracts`` retrace
+    contract: after one request has warmed the admit/decode
+    executables for a bucket, serving a full house of same-bucket
+    requests — admissions into previously untouched slots, evictions,
+    slot reuse — must dispatch zero new XLA compilations.  (The
+    eviction sweep's old per-slot ``out[slot]`` device fetch is guarded
+    separately, by the ``host-sync-loop`` lint.)"""
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(5)
+
+    def reqs(uids):
+        return [Request(uid=u,
+                        inputs={"tokens": rng.integers(
+                            0, cfg.vocab_size, (6,)).astype(np.int32)},
+                        max_new_tokens=4) for u in uids]
+
+    eng = SlotEngine(bundle, params, n_slots=4, max_new_tokens=4,
+                     max_prompt_len=8, eos_id=None, sync_every=2)
+    # warm-up touches only one slot (slots are handed out LIFO), so any
+    # per-slot executable would still be cold for the other three
+    eng.run(reqs([0]))
+    with assert_retrace_free("slot-engine steady state"):
+        comps = eng.run(reqs(range(1, 9)))
+    assert sorted(c.uid for c in comps) == list(range(1, 9))
+    assert all(len(c.tokens) == 4 for c in comps)
+
+
+def test_slot_engine_decode_donates_pool_and_stays_resident(lm):
+    """Level-2 contracts on the decode-scan executable: the slot-state
+    pool (the engine's carry) is donated back into itself, and the
+    scanned body contains no host transfers — the one sync per scan
+    happens outside the executable, in the host loop."""
+    cfg, bundle, params = lm
+    eng = SlotEngine(bundle, params, n_slots=2, max_new_tokens=4,
+                     max_prompt_len=8, eos_id=None, sync_every=2)
+    low = eng._decode_jit.lower(params, eng._state,
+                                jax.random.PRNGKey(0))
+    assert_donated(low, eng._state, skip=params)
+    assert_no_host_transfers(low, low.compile().as_text())
 
 
 def test_slot_engine_respects_budget_and_bounds(lm):

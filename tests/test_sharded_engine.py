@@ -10,7 +10,8 @@
   (alongside ``tests/test_sharding.py``) proving the sharded scanned
   epoch is bit-close to the single-device engine on the LM and RNN-T
   smoke configs, and that the sharded + chunked path still compiles
-  one epoch executable across selection rounds (``n_epoch_traces``).
+  one epoch executable across selection rounds (asserted through the
+  ``analysis.contracts`` retrace contract).
 """
 import os
 import subprocess
@@ -21,6 +22,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.analysis.contracts import assert_retrace_free
 from repro.configs import get_config
 from repro.configs.base import PGMConfig, TrainConfig
 from repro.data.pipeline import lm_units
@@ -87,8 +89,11 @@ def test_run_epochs_matches_run_epoch_bit_for_bit():
     assert np.isnan(np.asarray(vls)).all()
     assert np.asarray(lrs).tolist() == [tc.lr] * 3
     assert float(lr_out) == tc.lr
-    # the whole chunk is one executable
-    assert eng_b.n_epoch_traces == 1
+    # the whole chunk is one executable: a second chunk of same-shape
+    # plans must dispatch with zero fresh XLA compilations
+    plans2 = [eng_b.full_plan(e) for e in range(3, 6)]
+    with assert_retrace_free("second run_epochs chunk"):
+        eng_b.run_epochs(p_b, o_b, tc.lr, float("inf"), plans2)
 
 
 def test_run_epochs_device_newbob_matches_sequential_chunks():
@@ -359,6 +364,7 @@ def test_sharded_chunked_path_compiles_one_epoch_executable():
     chunked executable (the full warm-start chunk has its own)."""
     out = _run(textwrap.dedent("""
         import numpy as np, jax
+        from repro.analysis.contracts import assert_retrace_free
         from repro.configs import get_config
         from repro.configs.base import PGMConfig, TrainConfig
         from repro.data.pipeline import lm_units
@@ -382,19 +388,24 @@ def test_sharded_chunked_path_compiles_one_epoch_executable():
         # warm-start: a chunk of 2 full epochs
         p, o, *_ = eng.run_epochs(p, o, tc.lr, float("inf"),
                                   [eng.full_plan(0), eng.full_plan(1)])
-        assert eng.n_epoch_traces == 1, eng.n_epoch_traces
-        # 3 selection rounds, n_selected all in one bucket, chunks of 2
+        # 3 selection rounds, n_selected all in one bucket, chunks of 2;
+        # round 1 compiles the bucket-shape executable, rounds 2-3 must
+        # dispatch with zero fresh XLA compilations
+        rounds = []
         for rnd, n_sel in enumerate((13, 14, 16)):
             idx = np.arange(n_sel, dtype=np.int32)
             w = np.linspace(0.5, 2.0, n_sel).astype(np.float32)
             plans = [eng.subset_plan(idx, w, epoch=2 * rnd + e)
                      for e in range(2)]
             assert plans[0][0].shape == (16, 1)
-            p, o, losses, *_ = eng.run_epochs(p, o, tc.lr, float("inf"),
-                                              plans)
-            assert np.isfinite(np.asarray(losses)).all()
-        assert eng.n_epoch_traces == 2, \\
-            f"chunked epoch executable retraced ({eng.n_epoch_traces})"
+            rounds.append(plans)
+        p, o, losses, *_ = eng.run_epochs(p, o, tc.lr, float("inf"),
+                                          rounds[0])
+        with assert_retrace_free("sharded chunked subset rounds"):
+            for plans in rounds[1:]:
+                p, o, losses, *_ = eng.run_epochs(p, o, tc.lr,
+                                                  float("inf"), plans)
+                assert np.isfinite(np.asarray(losses)).all()
         print("TRACES-OK")
     """))
     assert "TRACES-OK" in out
